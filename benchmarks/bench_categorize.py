@@ -1,0 +1,17 @@
+"""Table 2 reproduction: automatic categorization of the benchmark suite."""
+
+from __future__ import annotations
+
+from repro.core import dependency as dep
+
+
+def run() -> list[str]:
+    results = dep.classify_paper_suite()
+    match = sum(1 for _, _, ok in results.values() if ok)
+    lines = [f"categorize/table2_match,{match}/{len(results)},benchmarks"]
+    by_cat: dict[str, list[str]] = {}
+    for name, (got, _, _) in sorted(results.items()):
+        by_cat.setdefault(got.value, []).append(name)
+    for cat, names in sorted(by_cat.items()):
+        lines.append(f"categorize/{cat},{len(names)},{'|'.join(names[:6])}...")
+    return lines

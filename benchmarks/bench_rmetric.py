@@ -1,0 +1,198 @@
+"""Fig. 1-4 reproduction: a statistical view of the data-transfer ratio R.
+
+The paper measures R = T_H2D / total stage-by-stage over 223 configurations
+of 56 benchmarks (OpenCL on CPU+MIC).  Here the analogous suite is:
+
+  * a micro-benchmark suite (matmul / elementwise / reduction / stencil /
+    fwt / nn-distance ... x several sizes) measured stage-by-stage with
+    ``HostStreamExecutor`` on this host (real H2D/KEX timings), and
+  * the 33 compiled (arch x shape) cells, whose R comes from the dry-run
+    roofline terms (transfer = memory+collective vs compute) — the
+    datacenter-scale analogue.
+
+Outputs the CDF of R (Fig. 1), R vs input size (Fig. 2), R vs code variant
+(Fig. 3) and R vs platform/mesh (Fig. 4).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import rmetric
+from repro.core.streams import HostStreamExecutor
+
+RESULTS = os.path.join(os.path.dirname(__file__), "results")
+
+
+# ---------------------------------------------------------------------------
+# Micro-benchmark suite (the paper's Table-1 analogue, CPU-host measured).
+# ---------------------------------------------------------------------------
+
+
+def _suite():
+    """(name, kernel_fn, task_builder) triples x size sweep."""
+    def sizes(base):
+        return [base // 4, base // 2, base, base * 2]
+
+    suite = []
+    # nn: distance to a target, reduction (paper's Embarrassingly Independent)
+    for n in sizes(1 << 18):
+        suite.append((
+            f"nn/{n}",
+            jax.jit(lambda x: jnp.sqrt((x ** 2).sum(-1)).min()),
+            lambda n=n: np.random.default_rng(0).normal(
+                size=(n, 2)).astype(np.float32),
+        ))
+    # matmul (compute-heavy: low R)
+    for n in (128, 256, 384, 512):
+        suite.append((
+            f"sgemm/{n}",
+            jax.jit(lambda x: (x @ x.T).sum()),
+            lambda n=n: np.random.default_rng(0).normal(
+                size=(n, n)).astype(np.float32),
+        ))
+    # vector add (transfer-dominated: high R)
+    for n in sizes(1 << 20):
+        suite.append((
+            f"VectorAdd/{n}",
+            jax.jit(lambda x: x + 1.0),
+            lambda n=n: np.zeros(n, np.float32),
+        ))
+    # reduction
+    for n in sizes(1 << 20):
+        suite.append((
+            f"Reduction/{n}",
+            jax.jit(lambda x: x.sum()),
+            lambda n=n: np.ones(n, np.float32),
+        ))
+    # stencil (paper's False-Dependent family)
+    for n in sizes(1 << 19):
+        suite.append((
+            f"stencil/{n}",
+            jax.jit(lambda x: 0.25 * (jnp.roll(x, 1) + 2 * x + jnp.roll(x, -1))),
+            lambda n=n: np.ones(n, np.float32),
+        ))
+    # fwt
+    for logn in (14, 16, 18):
+        from repro.kernels import ref as kref
+        suite.append((
+            f"FastWalshTransform/2^{logn}",
+            jax.jit(kref.fwt_ref),
+            lambda n=1 << logn: np.random.default_rng(1).normal(
+                size=n).astype(np.float32),
+        ))
+    # blackscholes-ish elementwise chain
+    for n in sizes(1 << 19):
+        suite.append((
+            f"BlackScholes/{n}",
+            jax.jit(lambda x: jax.nn.sigmoid(jnp.log1p(jnp.exp(x)) * 0.5) * x),
+            lambda n=n: np.ones(n, np.float32),
+        ))
+    return suite
+
+
+def measure_host_suite(repeats: int = 3) -> list[dict]:
+    """Stage-by-stage R for the micro suite (paper S3.3 methodology)."""
+    rows = []
+    for name, fn, builder in _suite():
+        task = builder()
+        ex = HostStreamExecutor(fn, num_streams=2)
+        ex.single_stream_run([task])  # warmup + compile
+        rs, h2ds, kexs = [], [], []
+        for _ in range(repeats):
+            r, stats = ex.measure_r([task])
+            rs.append(r)
+            h2ds.append(stats.h2d)
+            kexs.append(stats.kex)
+        rows.append({
+            "name": name,
+            "R": float(np.median(rs)),
+            "h2d_s": float(np.median(h2ds)),
+            "kex_s": float(np.median(kexs)),
+            "decision": rmetric.streaming_decision(
+                rmetric.StageTimes(np.median(h2ds), np.median(kexs))).value,
+        })
+    return rows
+
+
+def dryrun_cells_r(path: str | None = None) -> list[dict]:
+    """R of each compiled cell from the dry-run roofline terms."""
+    path = path or os.path.join(RESULTS, "dryrun_v2.json")
+    if not os.path.exists(path):
+        path = os.path.join(RESULTS, "dryrun.json")
+    if not os.path.exists(path):
+        return []
+    rows = []
+    for r in json.load(open(path)):
+        if "error" in r:
+            continue
+        rows.append({
+            "name": f"{r['arch']}/{r['shape']}/{r['mesh']}",
+            "R": r["paper_R"],
+            "decision": rmetric.streaming_decision(
+                rmetric.StageTimes(
+                    h2d=r["t_memory_s"], kex=r["t_compute_s"],
+                    d2h=r["t_collective_s"])).value,
+        })
+    return rows
+
+
+def cdf(values: list[float], thresholds=(0.1, 0.3, 0.5, 0.7, 0.9)) -> dict:
+    v = np.asarray(values)
+    return {f"<= {t}": float((v <= t).mean()) for t in thresholds}
+
+
+def run() -> list[str]:
+    lines = []
+    host = measure_host_suite()
+    rs = [r["R"] for r in host]
+    lines.append(f"rmetric/host_suite_n,{len(host)},configs")
+    c = cdf(rs)
+    for k, v in c.items():
+        lines.append(f"rmetric/host_cdf_R{k.replace(' ', '')},{v:.3f},fraction")
+    frac_nw = np.mean([r["decision"] == "not-worthwhile" for r in host])
+    lines.append(f"rmetric/host_not_worthwhile,{frac_nw:.3f},fraction")
+
+    cells = dryrun_cells_r()
+    if cells:
+        rs2 = [r["R"] for r in cells]
+        lines.append(f"rmetric/dryrun_cells_n,{len(cells)},cells")
+        for k, v in cdf(rs2).items():
+            lines.append(f"rmetric/dryrun_cdf_R{k.replace(' ', '')},{v:.3f},fraction")
+
+    # Fig 2 analogue: R changes with input size (show min/max over sweep)
+    by_family: dict[str, list[float]] = {}
+    for r in host:
+        fam = r["name"].split("/")[0]
+        by_family.setdefault(fam, []).append(r["R"])
+    for fam, vals in by_family.items():
+        lines.append(f"rmetric/{fam}_R_range,{min(vals):.3f}->{max(vals):.3f},input-sweep")
+
+    # Fig 3 analogue: code variants (reduction fully on device vs host-final)
+    v1 = jax.jit(lambda x: x.sum())  # all on device
+    v2 = jax.jit(lambda x: x.reshape(-1, 1024).sum(1))  # partial: host finishes
+    x = np.ones(1 << 21, np.float32)
+    r1, _ = HostStreamExecutor(v1).measure_r([x])
+    r2, _ = HostStreamExecutor(v2).measure_r([x])
+    lines.append(f"rmetric/variant_reduction_v1_R,{r1:.3f},on-device")
+    lines.append(f"rmetric/variant_reduction_v2_R,{r2:.3f},host-final")
+
+    # Fig 4 analogue: platform divergence = mesh divergence from the dry-run
+    cells_by = {}
+    for r in cells:
+        name = r["name"].rsplit("/", 1)
+        cells_by.setdefault(name[0], {})[name[1]] = r["R"]
+    diverging = [
+        (k, v.get("16x16"), v.get("2x16x16"))
+        for k, v in cells_by.items()
+        if v.get("16x16") is not None and v.get("2x16x16") is not None
+        and abs(v["16x16"] - v["2x16x16"]) > 0.02
+    ]
+    lines.append(f"rmetric/mesh_divergent_cells,{len(diverging)},of {len(cells_by)}")
+    return lines

@@ -1,0 +1,85 @@
+"""§Roofline report: per-(arch x shape x mesh) terms from the dry-run JSONs,
+plus baseline-vs-optimized deltas for the §Perf log."""
+
+from __future__ import annotations
+
+import json
+import os
+
+RESULTS = os.path.join(os.path.dirname(__file__), "results")
+
+
+def load(name: str) -> dict[tuple, dict]:
+    path = os.path.join(RESULTS, name)
+    if not os.path.exists(path):
+        return {}
+    out = {}
+    for r in json.load(open(path)):
+        if "error" not in r:
+            out[(r["arch"], r["shape"], r["mesh"])] = r
+    return out
+
+
+def table(rows: dict[tuple, dict], mesh: str = "16x16") -> list[str]:
+    lines = []
+    header = (f"{'arch':22s} {'shape':12s} {'bottleneck':11s} {'frac':>6s} "
+              f"{'R':>5s} {'comp_ms':>8s} {'mem_ms':>8s} {'coll_ms':>8s} "
+              f"{'useful':>6s} {'HBM_GB':>7s}")
+    lines.append(header)
+    for (arch, shape, m), r in sorted(rows.items()):
+        if m != mesh:
+            continue
+        lines.append(
+            f"{arch:22s} {shape:12s} {r['bottleneck']:11s} "
+            f"{r['roofline_fraction']:6.3f} {r['paper_R']:5.2f} "
+            f"{r['t_compute_s']*1e3:8.1f} {r['t_memory_s']*1e3:8.1f} "
+            f"{r['t_collective_s']*1e3:8.1f} "
+            f"{(r['useful_flops_ratio'] or 0):6.2f} "
+            f"{(r['mem_temp_bytes'] or 0)/1e9:7.1f}")
+    return lines
+
+
+def deltas(base: dict, opt: dict, mesh: str = "16x16") -> list[str]:
+    lines = [f"{'cell':36s} {'term':10s} {'before':>10s} {'after':>10s} {'x':>6s}"]
+    for key in sorted(set(base) & set(opt)):
+        arch, shape, m = key
+        if m != mesh:
+            continue
+        b, o = base[key], opt[key]
+        dom = b["bottleneck"]
+        bt = b[f"t_{dom}_s"]
+        ot = o[f"t_{dom}_s"]
+        if bt <= 0:
+            continue
+        ratio = bt / max(ot, 1e-12)
+        if abs(ratio - 1.0) > 0.05:
+            lines.append(
+                f"{arch + '/' + shape:36s} {dom:10s} {bt*1e3:9.1f}ms "
+                f"{ot*1e3:9.1f}ms {ratio:5.2f}x")
+    return lines
+
+
+def run() -> list[str]:
+    out = []
+    opt = load("dryrun_v2.json")
+    base = load("dryrun_baseline.json")
+    rows = opt or base
+    if not rows:
+        return ["roofline/no_dryrun_results,0,run launch.dryrun first"]
+    n = sum(1 for k in rows if k[2] == "16x16")
+    out.append(f"roofline/cells_16x16,{n},compiled")
+    n2 = sum(1 for k in rows if k[2] == "2x16x16")
+    out.append(f"roofline/cells_2x16x16,{n2},compiled")
+    for line in table(rows):
+        out.append("roofline/table," + line.replace(",", ";"))
+    if base and opt:
+        for line in deltas(base, opt):
+            out.append("roofline/delta," + line.replace(",", ";"))
+    # aggregate: dominant bottleneck census
+    census: dict[str, int] = {}
+    for (a, s, m), r in rows.items():
+        if m == "16x16":
+            census[r["bottleneck"]] = census.get(r["bottleneck"], 0) + 1
+    for k, v in sorted(census.items()):
+        out.append(f"roofline/bottleneck_{k},{v},cells")
+    return out

@@ -1,0 +1,54 @@
+# One function per paper table/figure. Prints ``name,us_per_call,derived`` CSV.
+"""Benchmark harness:
+
+  bench_rmetric    -> Fig. 1 (CDF of R), Fig. 2-4 (R vs size/variant/platform)
+  bench_overlap    -> Fig. 9 (single vs multi stream) + lavaMD negative case
+  bench_categorize -> Table 2 (dependency categorization)
+  bench_roofline   -> §Roofline table from the dry-run artifacts (e)/(g)
+
+Run: PYTHONPATH=src python -m benchmarks.run [--only NAME]
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="run a single bench: rmetric|overlap|categorize|roofline")
+    args = ap.parse_args()
+
+    from benchmarks import bench_categorize, bench_overlap, bench_rmetric, bench_roofline
+
+    benches = {
+        "categorize": bench_categorize.run,
+        "overlap": bench_overlap.run,
+        "rmetric": bench_rmetric.run,
+        "roofline": bench_roofline.run,
+    }
+    if args.only:
+        benches = {args.only: benches[args.only]}
+
+    failures = 0
+    for name, fn in benches.items():
+        t0 = time.perf_counter()
+        try:
+            lines = fn()
+        except Exception as e:  # report and continue
+            print(f"{name},ERROR,{type(e).__name__}: {e}", flush=True)
+            failures += 1
+            continue
+        dt = (time.perf_counter() - t0) * 1e6
+        print(f"{name}/_total,{dt:.0f},us", flush=True)
+        for line in lines:
+            print(line, flush=True)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

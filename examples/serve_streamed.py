@@ -1,0 +1,75 @@
+"""Streamed (chunked) prefill serving demo — the paper's pipeline at
+inference time.
+
+Shows: (1) streamed prefill produces bit-identical logits to one-shot
+prefill; (2) peak activation size drops from O(prompt) to O(chunk);
+(3) batched decode after the stream.
+
+    PYTHONPATH=src python examples/serve_streamed.py [--arch mamba2-2.7b]
+"""
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+import repro.configs as C
+from repro.models import transformer as T
+from repro.runtime.serving import ServeConfig, ServingEngine
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-4b", choices=C.list_archs())
+    ap.add_argument("--prompt-len", type=int, default=256)
+    ap.add_argument("--chunk", type=int, default=32)
+    ap.add_argument("--new-tokens", type=int, default=16)
+    args = ap.parse_args()
+
+    cfg = C.get_smoke_config(args.arch)
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    b, s = 2, args.prompt_len
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (b, s), 0, cfg.vocab_size)
+    kw = {}
+    if cfg.is_encoder_decoder:
+        kw["enc_inputs"] = 0.1 * jax.random.normal(
+            jax.random.PRNGKey(2), (b, cfg.encoder_seq, cfg.d_model))
+    if cfg.prefix_len:
+        kw["prefix_embeds"] = 0.1 * jax.random.normal(
+            jax.random.PRNGKey(3), (b, cfg.prefix_len, cfg.d_model))
+
+    max_seq = s + cfg.prefix_len + args.new_tokens
+    eng = ServingEngine(cfg, params, ServeConfig(
+        max_seq=max_seq, prefill_chunk=args.chunk,
+        max_new_tokens=args.new_tokens))
+
+    t0 = time.perf_counter()
+    logits_stream, _, pos = eng.prefill_streamed(tokens, **kw)
+    t_stream = time.perf_counter() - t0
+
+    # one-shot reference
+    batch = dict(tokens=tokens, **{
+        {"enc_inputs": "enc_inputs", "prefix_embeds": "prefix_embeds"}[k]: v
+        for k, v in kw.items()})
+    t0 = time.perf_counter()
+    logits_one, _ = T.prefill(cfg, params, batch, max_seq=max_seq)
+    t_one = time.perf_counter() - t0
+
+    err = float(jnp.abs(logits_stream - logits_one).max())
+    n_chunks = -(-s // args.chunk)
+    print(f"[serve] arch={args.arch} prompt={s} chunk={args.chunk} "
+          f"({n_chunks} stream tasks)")
+    print(f"[serve] streamed-vs-oneshot max |dlogit| = {err:.2e}")
+    print(f"[serve] peak prefill activation: O({args.chunk}) vs O({s}) tokens "
+          f"({s // args.chunk}x reduction)")
+    print(f"[serve] walltime: streamed {t_stream:.2f}s, one-shot {t_one:.2f}s "
+          f"(CPU; on TPU chunk DMA overlaps compute)")
+
+    toks = eng.generate(tokens, **kw)
+    print(f"[serve] decoded {toks.shape[1]} tokens/request: {toks.tolist()[0][:8]}...")
+    assert err < 1e-3
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,135 @@
+"""Fault-tolerant checkpointing: atomic, async, resharding-aware.
+
+Production requirements covered:
+  * **atomic**: write to ``step_N.tmp`` then rename — a crash mid-save never
+    corrupts the latest checkpoint;
+  * **async**: the save runs on a background thread from a host snapshot, so
+    the train-step stream is not blocked (checkpoint D2H is one more stream
+    overlapping compute — the paper's pipeline again);
+  * **auto-resume**: ``latest_step`` / ``restore`` pick up the newest valid
+    checkpoint after a crash or preemption;
+  * **elastic re-mesh**: checkpoints are stored as host numpy trees and
+    re-sharded on restore via ``jax.device_put`` with the *target* sharding,
+    so a job can restart on a different mesh shape (tested in
+    tests/test_checkpoint.py);
+  * retention: keep the last ``keep`` checkpoints.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import pickle
+import shutil
+import threading
+from typing import Any
+
+import jax
+import numpy as np
+
+Params = Any
+
+
+class Checkpointer:
+    def __init__(self, directory: str, *, keep: int = 3):
+        self.directory = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+        self._thread: threading.Thread | None = None
+        self._error: Exception | None = None
+
+    # -- paths ---------------------------------------------------------------
+
+    def _step_dir(self, step: int) -> str:
+        return os.path.join(self.directory, f"step_{step:010d}")
+
+    def steps(self) -> list[int]:
+        out = []
+        for name in os.listdir(self.directory):
+            if name.startswith("step_") and not name.endswith(".tmp"):
+                marker = os.path.join(self.directory, name, "DONE")
+                if os.path.exists(marker):
+                    out.append(int(name.split("_")[1]))
+        return sorted(out)
+
+    def latest_step(self) -> int | None:
+        s = self.steps()
+        return s[-1] if s else None
+
+    # -- save ----------------------------------------------------------------
+
+    def _write(self, step: int, host_tree: Any, meta: dict) -> None:
+        try:
+            final = self._step_dir(step)
+            tmp = final + ".tmp"
+            if os.path.exists(tmp):
+                shutil.rmtree(tmp)
+            os.makedirs(tmp)
+            leaves, treedef = jax.tree.flatten(host_tree)
+            np.savez(os.path.join(tmp, "arrays.npz"),
+                     **{f"leaf_{i}": leaf for i, leaf in enumerate(leaves)})
+            with open(os.path.join(tmp, "treedef.pkl"), "wb") as f:
+                pickle.dump(treedef, f)
+            with open(os.path.join(tmp, "meta.json"), "w") as f:
+                json.dump(meta, f)
+            with open(os.path.join(tmp, "DONE"), "w") as f:
+                f.write("ok")
+            if os.path.exists(final):
+                shutil.rmtree(final)
+            os.rename(tmp, final)  # atomic publish
+            self._gc()
+        except Exception as e:  # surfaced on the next wait()/save()
+            self._error = e
+
+    def _gc(self) -> None:
+        steps = self.steps()
+        for s in steps[: -self.keep]:
+            shutil.rmtree(self._step_dir(s), ignore_errors=True)
+
+    def save(self, step: int, tree: Params, *, meta: dict | None = None,
+             blocking: bool = False) -> None:
+        """Snapshot to host (sync) then serialize on a worker thread (async)."""
+        self.wait()  # one in-flight save at a time; raises previous errors
+        host_tree = jax.tree.map(np.asarray, tree)  # D2H stage
+        meta = dict(meta or {}, step=step)
+        self._thread = threading.Thread(
+            target=self._write, args=(step, host_tree, meta), daemon=True)
+        self._thread.start()
+        if blocking:
+            self.wait()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
+
+    # -- restore ---------------------------------------------------------------
+
+    def restore(self, step: int | None = None, *, shardings: Any | None = None
+                ) -> tuple[Params, dict]:
+        """Load a checkpoint; optionally re-shard onto a (new) mesh.
+
+        ``shardings``: pytree of NamedSharding matching the saved tree — the
+        elastic-scaling path: the checkpoint written on mesh A is placed onto
+        mesh B's shardings.
+        """
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.directory}")
+        d = self._step_dir(step)
+        with open(os.path.join(d, "treedef.pkl"), "rb") as f:
+            treedef = pickle.load(f)
+        with np.load(os.path.join(d, "arrays.npz")) as z:
+            leaves = [z[f"leaf_{i}"] for i in range(len(z.files))]
+        tree = jax.tree.unflatten(treedef, leaves)
+        with open(os.path.join(d, "meta.json")) as f:
+            meta = json.load(f)
+        if shardings is not None:
+            flat_s, sdef = jax.tree.flatten(shardings)
+            flat_t = sdef.flatten_up_to(tree)
+            tree = sdef.unflatten(
+                [jax.device_put(t, s) for t, s in zip(flat_t, flat_s)])
+        return tree, meta

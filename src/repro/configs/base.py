@@ -1,0 +1,71 @@
+"""Shared config plumbing: assigned input shapes + smoke-reduction helper."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax.numpy as jnp
+
+from repro.models.transformer import LayerSpec, ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+#: The assigned LM shape set (same for all 10 archs).
+SHAPES: dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "decode"),
+}
+
+
+def smoke_reduce(cfg: ModelConfig, **overrides: Any) -> ModelConfig:
+    """Shrink a full config to a CPU-smoke-testable config of the same family.
+
+    Keeps the layer-unit structure (the family's identity) but reduces depth,
+    width, experts and vocab; switches to fp32 for CPU numerics.
+    """
+    unit = cfg.layer_unit
+    changes: dict[str, Any] = dict(
+        n_layers=2 * len(unit),
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=min(cfg.n_kv_heads, 2) if cfg.n_kv_heads < cfg.n_heads else 4,
+        head_dim=16,
+        d_ff=128 if cfg.d_ff else 0,
+        vocab_size=512,
+        param_dtype=jnp.float32,
+        compute_dtype=jnp.float32,
+        attn_chunk=16,
+        loss_chunk=16,
+        moe_chunk=16,
+        ssd_chunk=8,
+        remat="none",
+    )
+    if cfg.n_experts:
+        changes.update(n_experts=4, top_k=min(cfg.top_k, 2), expert_d_ff=32,
+                       n_shared_experts=min(cfg.n_shared_experts, 2) or 0,
+                       shared_d_ff=64 if cfg.n_shared_experts else None)
+    if any(s.mixer == "mamba" for s in unit):
+        changes.update(ssm_state=16, mamba_headdim=8)
+    if cfg.n_encoder_layers:
+        changes.update(n_encoder_layers=2, encoder_seq=16)
+    if cfg.prefix_len:
+        changes.update(prefix_len=8)
+    if cfg.sliding_window:
+        changes.update(sliding_window=16)
+    if cfg.query_scale is not None:
+        changes.update(query_scale=1.0 / (changes["d_model"] / changes["n_heads"]) ** 0.5)
+    changes.update(overrides)
+    return dataclasses.replace(cfg, **changes)
+
+
+__all__ = ["LayerSpec", "ModelConfig", "ShapeSpec", "SHAPES", "smoke_reduce"]

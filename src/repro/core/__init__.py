@@ -1,0 +1,17 @@
+"""Core streaming library: the paper's contribution as composable JAX modules.
+
+  rmetric    -- the R metric, streaming-necessity decision, pipeline model,
+                roofline-term derivation from compiled executables.
+  dependency -- task-dependency taxonomy (SYNC/Iterative/Independent/
+                False-dependent/True-dependent) and classifier.
+  streams    -- stream_map / stream_scan (device level) and
+                HostStreamExecutor (host level, real H2D overlap).
+  halo       -- false-dependent partitioning with redundant boundary
+                transfer + the lavaMD profitability rule.
+  wavefront  -- true-dependent wavefront scheduler (NW-style).
+  overlap    -- collective<->compute overlap (ring collective matmul).
+"""
+
+from repro.core import dependency, halo, overlap, rmetric, streams, wavefront
+
+__all__ = ["dependency", "halo", "overlap", "rmetric", "streams", "wavefront"]

@@ -1,0 +1,458 @@
+"""Trip-count-aware cost analysis of compiled (post-SPMD) HLO text.
+
+XLA's built-in ``compiled.cost_analysis()`` counts each ``while`` body ONCE,
+so any scan-based program (layer stacks, flash-attention block streams, grad
+accumulation) under-reports FLOPs, bytes and collective traffic by the trip
+count.  This module re-derives the three roofline terms by walking the HLO
+text with loop multipliers:
+
+  * **flops**: every ``dot`` = 2 * prod(output dims) * prod(contracting dims)
+    (post-SPMD -> per-device).
+  * **bytes**: post-fusion HBM traffic model -- each top-level instruction
+    reads its operands and writes its output once (XLA has already fused
+    elementwise chains into ``fusion`` ops, so remaining instructions map
+    ~1:1 onto buffer traffic).  Frees (bitcast, get-tuple-element, tuple,
+    parameter, constant) cost nothing.
+  * **collective_bytes**: per-participant wire payloads -- all-gather /
+    all-to-all / collective-permute count output bytes; all-reduce counts
+    2x (ring = reduce-scatter + all-gather); reduce-scatter counts its
+    (larger) operand.
+
+``while`` trip counts are recovered from the loop condition (induction
+variable compared LT against a constant -- exactly what ``lax.scan``/
+``fori_loop`` emit).  ``fusion``/``call``/``conditional`` recurse.
+
+This is the paper's "run stage-by-stage and record the stage times"
+methodology (S3.3) executed statically against the compiled artifact.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Iterable
+
+_DTYPE_BYTES = {
+    "pred": 1, "s2": 1, "u2": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3b11fnuz": 1, "f8e4m3": 1, "f8e5m2fnuz": 1,
+    "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+    "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"([a-z][a-z0-9]*)\[([0-9,]*)\]")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.+?)\s+([a-z][a-z0-9\-]*)\((.*)$"
+)
+_COMP_HEAD_RE = re.compile(r"^(?:ENTRY\s+)?%?([^\s(]+)")
+_CALLS_RE = re.compile(r"(?:calls|body|condition|to_apply)=%?([\w\.\-]+)")
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+
+#: ops that move no data
+_FREE_OPS = {
+    "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+    "after-all", "partition-id", "replica-id", "iota", "get-dimension-size",
+    "domain", "opt-barrier",
+}
+_COLLECTIVES = {
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+}
+
+
+def _dims(dims_str: str) -> list[int]:
+    return [int(d) for d in dims_str.split(",")] if dims_str else []
+
+
+def _shape_bytes_from_str(type_str: str) -> int:
+    """Total bytes of a (possibly tuple) shape string."""
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt = m.group(1)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in _dims(m.group(2)):
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    type_str: str
+    opcode: str
+    rest: str  # operands + attrs (everything after the opening paren)
+
+    def operand_names(self) -> list[str]:
+        """Names of %operands inside the call parens."""
+        depth = 1
+        out: list[str] = []
+        buf = []
+        for ch in self.rest:
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    break
+            buf.append(ch)
+        inner = "".join(buf)
+        for m in re.finditer(r"%([\w\.\-]+)", inner):
+            out.append(m.group(1))
+        return out
+
+    def attrs(self) -> str:
+        depth = 1
+        for i, ch in enumerate(self.rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    return self.rest[i + 1:]
+        return ""
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    instrs: list[Instr]
+
+
+@dataclasses.dataclass
+class CostTotals:
+    flops: float = 0.0
+    bytes: float = 0.0
+    collective_bytes: float = 0.0
+    collective_by_op: dict[str, float] = dataclasses.field(
+        default_factory=lambda: {op: 0.0 for op in _COLLECTIVES})
+
+    def scaled(self, k: float) -> "CostTotals":
+        return CostTotals(
+            self.flops * k, self.bytes * k, self.collective_bytes * k,
+            {op: v * k for op, v in self.collective_by_op.items()})
+
+    def add(self, other: "CostTotals") -> None:
+        self.flops += other.flops
+        self.bytes += other.bytes
+        self.collective_bytes += other.collective_bytes
+        for op, v in other.collective_by_op.items():
+            self.collective_by_op[op] += v
+
+
+class HloModule:
+    """Parsed HLO text: computations, instruction shapes, call graph."""
+
+    def __init__(self, text: str):
+        self.computations: dict[str, Computation] = {}
+        self.shape_of: dict[str, str] = {}
+        self.const_val: dict[str, int] = {}
+        self.entry: str | None = None
+        self._parse(text)
+
+    def _parse(self, text: str) -> None:
+        cur: Computation | None = None
+        for raw in text.splitlines():
+            line = raw.rstrip()
+            if not line:
+                continue
+            if (not line.startswith(" ") and ") -> " in line
+                    and line.rstrip().endswith("{")):
+                m = _COMP_HEAD_RE.match(line.strip())
+                if m:
+                    cur = Computation(m.group(1), [])
+                    self.computations[cur.name] = cur
+                    if line.strip().startswith("ENTRY"):
+                        self.entry = cur.name
+                continue
+            if line.strip() == "}":
+                cur = None
+                continue
+            m = _INSTR_RE.match(line)
+            if m and cur is not None:
+                name, type_str, opcode, rest = m.groups()
+                instr = Instr(name, type_str, opcode, rest)
+                cur.instrs.append(instr)
+                self.shape_of[name] = type_str
+                if opcode == "constant":
+                    cm = re.match(r"\s*([0-9]+)\s*\)", rest)
+                    if cm and type_str.strip() in ("s32[]", "u32[]", "s64[]", "u64[]"):
+                        self.const_val[name] = int(cm.group(1))
+
+    # -- helpers ------------------------------------------------------------
+
+    def _operand_bytes(self, instr: Instr) -> float:
+        total = 0.0
+        for op_name in instr.operand_names():
+            ts = self.shape_of.get(op_name)
+            if ts:
+                total += _shape_bytes_from_str(ts)
+        return total
+
+    def _dot_flops(self, instr: Instr) -> float:
+        out = _SHAPE_RE.search(instr.type_str)
+        if not out:
+            return 0.0
+        out_elems = 1
+        for d in _dims(out.group(2)):
+            out_elems *= d
+        attrs = instr.attrs()
+        m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", attrs)
+        contract = 1
+        ops = instr.operand_names()
+        if m and ops:
+            lhs_shape = self.shape_of.get(ops[0], "")
+            sm = _SHAPE_RE.search(lhs_shape)
+            if sm:
+                ldims = _dims(sm.group(2))
+                for ci in _dims(m.group(1)):
+                    if ci < len(ldims):
+                        contract *= ldims[ci]
+        return 2.0 * out_elems * contract
+
+    def _trip_count(self, cond_name: str, _depth: int = 0) -> int:
+        """Recover the scan/fori trip count from the loop condition.
+
+        ``lax.scan``/``fori_loop`` conditions compare the induction variable
+        (init 0, step 1) LT against a constant bound.  The compare may be
+        folded into a fusion, so search recursively; fall back to the largest
+        integer constant reachable from the condition.
+        """
+        comp = self.computations.get(cond_name)
+        if comp is None or _depth > 3:
+            return 1
+        consts: list[int] = []
+        for instr in comp.instrs:
+            if instr.opcode == "compare":
+                attrs = instr.attrs()
+                dm = re.search(r"direction=(\w+)", attrs)
+                direction = dm.group(1) if dm else "LT"
+                for op_name in instr.operand_names():
+                    if op_name in self.const_val:
+                        n = self.const_val[op_name]
+                        return max(1, n + (1 if direction == "LE" else 0))
+                cm = re.search(r"constant\((\d+)\)", instr.rest)
+                if cm:
+                    return max(1, int(cm.group(1)))
+            if instr.name in self.const_val:
+                consts.append(self.const_val[instr.name])
+            if instr.opcode in ("fusion", "call"):
+                for sub in _CALLS_RE.findall(instr.attrs()):
+                    sub_comp = self.computations.get(sub)
+                    if sub_comp is None:
+                        continue
+                    for si in sub_comp.instrs:
+                        if si.opcode == "compare":
+                            dm = re.search(r"direction=(\w+)", si.attrs())
+                            direction = dm.group(1) if dm else "LT"
+                            bump = 1 if direction == "LE" else 0
+                            # operands are fusion params; map back via the
+                            # fusion call's operand list where possible,
+                            # else use constants visible in either scope.
+                            cm = re.search(r"constant\((\d+)\)", si.rest)
+                            if cm:
+                                return max(1, int(cm.group(1)) + bump)
+                            for op_name in si.operand_names():
+                                if op_name in self.const_val:
+                                    return max(1, self.const_val[op_name] + bump)
+                            # fall through to outer-scope constants
+                            outer = [
+                                self.const_val[o]
+                                for o in instr.operand_names()
+                                if o in self.const_val
+                            ]
+                            if outer:
+                                return max(1, max(outer) + bump)
+        if consts:
+            return max(1, max(consts))
+        return 1
+
+    def _fusion_bytes(self, instr: Instr) -> float:
+        """HBM traffic of one fusion: slice- and in-place-update-aware.
+
+        Scan bodies update big stacked buffers through fused dynamic-slice /
+        dynamic-update-slice: the fusion's operand/output *shapes* are the
+        full (n_layers, ...) stacks but the actual traffic is one slice.
+        Map fusion operands to the fused computation's parameters and count:
+          * parameter used only by dynamic-slice -> the slice bytes,
+          * parameter that is a dynamic-update-slice target -> 0 (aliased),
+          * any other use -> full operand bytes;
+        output: if the root (or a tuple element) is a DUS, count the update
+        slice twice (read-modify-write), else the full output once.
+        """
+        subs = _CALLS_RE.findall(instr.attrs())
+        sub = self.computations.get(subs[0]) if subs else None
+        if sub is None:
+            return self._operand_bytes(instr) + _shape_bytes_from_str(instr.type_str)
+
+        # parameter index -> local name
+        param_name: dict[int, str] = {}
+        for si in sub.instrs:
+            if si.opcode == "parameter":
+                pm = re.match(r"\s*(\d+)\s*\)", si.rest)
+                if pm:
+                    param_name[int(pm.group(1))] = si.name
+
+        sliced_bytes: dict[str, float] = {}
+        full_use: set[str] = set()
+        dus_targets: set[str] = set()
+        dus_update_b = 0.0
+        has_dus_root = False
+        pnames = set(param_name.values())
+        # alias map: bitcasts/reshapes of a parameter act as the parameter
+        alias: dict[str, str] = {n: n for n in pnames}
+        for si in sub.instrs:
+            ops_ = si.operand_names()
+            if si.opcode in ("bitcast", "copy", "reshape") and ops_ and ops_[0] in alias:
+                alias[si.name] = alias[ops_[0]]
+                continue
+            if si.opcode == "dynamic-slice" and ops_ and ops_[0] in alias:
+                root_p = alias[ops_[0]]
+                sliced_bytes[root_p] = sliced_bytes.get(root_p, 0.0) + \
+                    _shape_bytes_from_str(si.type_str)
+                continue
+            if si.opcode == "dynamic-update-slice":
+                has_dus_root = True  # DUS in a loop fusion aliases its target
+                if ops_ and ops_[0] in alias:
+                    dus_targets.add(alias[ops_[0]])
+                upd = self.shape_of.get(ops_[1], "") if len(ops_) > 1 else ""
+                dus_update_b += 2.0 * _shape_bytes_from_str(upd)
+                continue
+            for o in ops_:
+                if o in alias:
+                    full_use.add(alias[o])
+
+        total = dus_update_b
+        outer_ops = instr.operand_names()
+        for idx, outer in enumerate(outer_ops):
+            local = param_name.get(idx)
+            if local is None:
+                continue
+            if local in dus_targets:
+                continue  # in-place target, aliased with output
+            if local in full_use:
+                total += _shape_bytes_from_str(self.shape_of.get(outer, ""))
+            elif local in sliced_bytes:
+                total += sliced_bytes[local]
+        if not has_dus_root:
+            total += _shape_bytes_from_str(instr.type_str)
+        return total
+
+    # -- cost walk ----------------------------------------------------------
+
+    def cost(self, comp_name: str | None = None, _memo: dict | None = None) -> CostTotals:
+        comp_name = comp_name or self.entry
+        _memo = _memo if _memo is not None else {}
+        if comp_name in _memo:
+            return _memo[comp_name]
+        comp = self.computations.get(comp_name)
+        total = CostTotals()
+        if comp is None:
+            return total
+        for instr in comp.instrs:
+            op = instr.opcode
+            if op in _FREE_OPS:
+                continue
+            if op == "while":
+                calls = dict(re.findall(r"(body|condition)=%?([\w\.\-]+)", instr.attrs()))
+                trips = self._trip_count(calls.get("condition", ""))
+                body_cost = self.cost(calls.get("body", ""), _memo)
+                total.add(body_cost.scaled(trips))
+                continue
+            if op == "scatter":
+                ops_ = instr.operand_names()
+                upd = self.shape_of.get(ops_[2], "") if len(ops_) > 2 else ""
+                total.bytes += 2.0 * _shape_bytes_from_str(upd)
+                continue
+            if op == "fusion":
+                total.bytes += self._fusion_bytes(instr)
+                for sub in _CALLS_RE.findall(instr.attrs()):
+                    if sub in self.computations:
+                        sub_cost = self.cost(sub, _memo)
+                        # fused bodies are in-register; take only flops (dots
+                        # inside fusions are rare but real) and collectives.
+                        total.flops += sub_cost.flops
+                        total.collective_bytes += sub_cost.collective_bytes
+                        for k, v in sub_cost.collective_by_op.items():
+                            total.collective_by_op[k] += v
+                continue
+            if op in ("call", "map", "reduce", "reduce-window",
+                      "sort", "custom-call"):
+                # traffic: operands + output once
+                total.bytes += self._operand_bytes(instr)
+                total.bytes += _shape_bytes_from_str(instr.type_str)
+                for sub in _CALLS_RE.findall(instr.attrs()):
+                    if sub in self.computations:
+                        sub_cost = self.cost(sub, _memo)
+                        total.flops += sub_cost.flops
+                        total.collective_bytes += sub_cost.collective_bytes
+                        for k, v in sub_cost.collective_by_op.items():
+                            total.collective_by_op[k] += v
+                continue
+            if op == "conditional":
+                branches: list[str] = []
+                bm = _BRANCHES_RE.search(instr.attrs())
+                if bm:
+                    branches = re.findall(r"%?([\w\.\-]+)", bm.group(1))
+                else:
+                    branches = [c for _, c in re.findall(
+                        r"(true_computation|false_computation)=%?([\w\.\-]+)",
+                        instr.attrs())]
+                if branches:
+                    worst = max(
+                        (self.cost(b, _memo) for b in branches),
+                        key=lambda c: c.flops + c.bytes)
+                    total.add(worst)
+                continue
+            if op == "dot":
+                total.flops += self._dot_flops(instr)
+                total.bytes += self._operand_bytes(instr)
+                total.bytes += _shape_bytes_from_str(instr.type_str)
+                continue
+            if op == "convolution":
+                # rough: 2 * out elems * (in_channels * window) -- our models
+                # implement convs as shifts, so this path is mostly unused.
+                total.flops += 2.0 * _shape_bytes_from_str(instr.type_str)
+                total.bytes += self._operand_bytes(instr)
+                total.bytes += _shape_bytes_from_str(instr.type_str)
+                continue
+            if op in ("dynamic-slice", "slice"):
+                # reads + writes only the slice, not the full operand
+                total.bytes += 2.0 * _shape_bytes_from_str(instr.type_str)
+                continue
+            if op == "gather":
+                total.bytes += 2.0 * _shape_bytes_from_str(instr.type_str)
+                continue
+            if op == "dynamic-update-slice":
+                ops_ = instr.operand_names()
+                upd = self.shape_of.get(ops_[1], "") if len(ops_) > 1 else ""
+                total.bytes += 2.0 * _shape_bytes_from_str(upd)
+                continue
+            base = op.replace("-start", "")
+            if base in _COLLECTIVES:
+                if op.endswith("-done"):
+                    continue
+                out_b = _shape_bytes_from_str(instr.type_str)
+                if base == "all-reduce":
+                    wire = 2.0 * out_b
+                elif base == "reduce-scatter":
+                    wire = self._operand_bytes(instr)
+                else:
+                    wire = out_b
+                total.collective_bytes += wire
+                total.collective_by_op[base] += wire
+                total.bytes += out_b + self._operand_bytes(instr)
+                continue
+            # generic data-moving op (copy, transpose, slice, dus, gather,
+            # concatenate, broadcast, pad, reverse, convert, ...)
+            total.bytes += self._operand_bytes(instr)
+            total.bytes += _shape_bytes_from_str(instr.type_str)
+        _memo[comp_name] = total
+        return total
+
+
+def analyse_hlo_text(text: str) -> CostTotals:
+    return HloModule(text).cost()

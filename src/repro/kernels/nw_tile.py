@@ -1,0 +1,98 @@
+"""Needleman-Wunsch DP tile kernel — the paper's True-Dependent case study.
+
+The paper streams NW by tiling the DP matrix and running anti-diagonals of
+tiles concurrently (§4.2, Fig 8).  This kernel computes ONE (B, B) tile
+given its north boundary row, west boundary column, and northwest corner —
+the RAW handoff values produced by earlier tiles.  The wavefront scheduler
+(``repro.core.wavefront``) vmaps it across a diagonal and scans diagonals.
+
+In-tile recurrence (linear gap penalty g):
+
+    H[i,j] = max(H[i-1,j-1] + sub[i,j], H[i-1,j] - g, H[i,j-1] - g)
+
+The within-row chain H[i,j-1] - g is a max-plus prefix scan, vectorized as
+a log-step shift-max ladder so each row is pure vector ops (no sequential
+inner loop on the lane axis — TPU/VPU friendly).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -1e9
+
+
+def _row_chain_max(tmp: jax.Array, gap: float, block: int) -> jax.Array:
+    """H[j] = max_{j'<=j}(tmp[j'] - (j - j') * gap), via shift-max doubling."""
+    x = tmp
+    shift = 1
+    while shift < block:
+        shifted = jnp.concatenate(
+            [jnp.full((shift,), NEG, x.dtype), x[:-shift] - gap * shift])
+        x = jnp.maximum(x, shifted)
+        shift *= 2
+    return x
+
+
+def _nw_kernel(
+    north_ref,  # (1, B) boundary row from the tile above
+    west_ref,  # (1, B) boundary column from the tile on the left
+    corner_ref,  # (1, 1) H of the northwest corner
+    sub_ref,  # (B, B) substitution scores for this tile
+    tile_ref,  # out: (B, B) H values
+    *,
+    block: int,
+    gap: float,
+):
+    north = north_ref[0].astype(jnp.float32)  # (B,)
+    west = west_ref[0].astype(jnp.float32)  # (B,)
+    corner = corner_ref[0, 0].astype(jnp.float32)
+    sub = sub_ref[...].astype(jnp.float32)
+
+    tile0 = jnp.zeros((block, block), jnp.float32)
+
+    def row(i, carry):
+        tile, prev_row, prev_west = carry
+        # prev_row = H[i-1, :] ; prev_west = H[i-1, -west-] = west[i-1]/corner
+        diag = jnp.concatenate([prev_west[None], prev_row[:-1]])  # H[i-1,j-1]
+        wi = jax.lax.dynamic_index_in_dim(west, i, keepdims=False)
+        si = jax.lax.dynamic_index_in_dim(sub, i, axis=0, keepdims=False)
+        tmp = jnp.maximum(diag + si, prev_row - gap)  # without the row chain
+        # account the west neighbour H[i, -1] = west[i] entering the chain
+        tmp = tmp.at[0].set(jnp.maximum(tmp[0], wi - gap))
+        h = _row_chain_max(tmp, gap, block)
+        tile = jax.lax.dynamic_update_index_in_dim(tile, h, i, axis=0)
+        return tile, h, wi
+
+    tile, _, _ = jax.lax.fori_loop(0, block, row, (tile0, north, corner))
+    tile_ref[...] = tile.astype(tile_ref.dtype)
+
+
+def nw_tile(
+    north: jax.Array,  # (B,)
+    west: jax.Array,  # (B,)
+    corner: jax.Array,  # scalar
+    sub: jax.Array,  # (B, B)
+    *,
+    gap: float = 1.0,
+    interpret: bool = False,
+) -> jax.Array:
+    """Compute one NW DP tile. Returns the (B, B) score tile."""
+    block = sub.shape[0]
+    return pl.pallas_call(
+        functools.partial(_nw_kernel, block=block, gap=gap),
+        in_specs=[
+            pl.BlockSpec((1, block), lambda: (0, 0)),
+            pl.BlockSpec((1, block), lambda: (0, 0)),
+            pl.BlockSpec((1, 1), lambda: (0, 0)),
+            pl.BlockSpec((block, block), lambda: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block, block), lambda: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((block, block), jnp.float32),
+        interpret=interpret,
+    )(north[None, :], west[None, :], corner[None, None], sub)

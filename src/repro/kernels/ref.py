@@ -1,0 +1,96 @@
+"""Pure-jnp oracles for every kernel (the allclose ground truth)."""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def matmul_ref(x: jax.Array, y: jax.Array) -> jax.Array:
+    return jnp.dot(x, y, preferred_element_type=jnp.float32).astype(
+        jnp.result_type(x.dtype, y.dtype))
+
+
+def attention_ref(
+    q: jax.Array,  # (BH, Sq, hd)
+    k: jax.Array,  # (BH, Sk, hd)
+    v: jax.Array,  # (BH, Sk, hd)
+    *,
+    causal: bool = True,
+    window: int = 0,
+    softcap: float = 0.0,
+    scale: float,
+) -> jax.Array:
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32), k.astype(jnp.float32)) * scale
+    if softcap > 0.0:
+        s = softcap * jnp.tanh(s / softcap)
+    sq, sk = q.shape[1], k.shape[1]
+    qpos = jnp.arange(sq)[:, None]
+    kpos = jnp.arange(sk)[None, :]
+    ok = jnp.ones((sq, sk), bool)
+    if causal:
+        ok = qpos >= kpos
+    if window > 0:
+        ok = ok & (qpos - kpos < window)
+    s = jnp.where(ok[None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def fwt_ref(x: jax.Array) -> jax.Array:
+    """Unnormalized Walsh-Hadamard transform over the last axis."""
+    n = x.shape[-1]
+    assert n & (n - 1) == 0
+    out = x.astype(jnp.float32)
+    h = 1
+    while h < n:
+        out = out.reshape(*x.shape[:-1], n // (2 * h), 2, h)
+        a, b = out[..., 0, :], out[..., 1, :]
+        out = jnp.stack([a + b, a - b], axis=-2).reshape(*x.shape[:-1], n)
+        h *= 2
+    return out.astype(x.dtype)
+
+
+def nw_ref(
+    north: np.ndarray,  # (B,)
+    west: np.ndarray,  # (B,)
+    corner: float,
+    sub: np.ndarray,  # (B, B)
+    *,
+    gap: float = 1.0,
+) -> np.ndarray:
+    """Sequential double-loop NW tile (numpy oracle)."""
+    b = sub.shape[0]
+    h = np.zeros((b + 1, b + 1), np.float32)
+    h[0, 0] = corner
+    h[0, 1:] = np.asarray(north, np.float32)
+    h[1:, 0] = np.asarray(west, np.float32)
+    for i in range(1, b + 1):
+        for j in range(1, b + 1):
+            h[i, j] = max(
+                h[i - 1, j - 1] + sub[i - 1, j - 1],
+                h[i - 1, j] - gap,
+                h[i, j - 1] - gap,
+            )
+    return h[1:, 1:]
+
+
+def nw_full_ref(seq_scores: np.ndarray, *, gap: float = 1.0) -> np.ndarray:
+    """Full NW matrix for an (n, m) substitution score matrix with zero
+    boundary initialized to -i*gap / -j*gap (standard global alignment)."""
+    n, m = seq_scores.shape
+    h = np.zeros((n + 1, m + 1), np.float32)
+    h[0, :] = -gap * np.arange(m + 1)
+    h[:, 0] = -gap * np.arange(n + 1)
+    for i in range(1, n + 1):
+        for j in range(1, m + 1):
+            h[i, j] = max(
+                h[i - 1, j - 1] + seq_scores[i - 1, j - 1],
+                h[i - 1, j] - gap,
+                h[i, j - 1] - gap,
+            )
+    return h[1:, 1:]

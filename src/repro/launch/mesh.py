@@ -1,0 +1,34 @@
+"""Production mesh construction.
+
+Single pod: (data=16, model=16) over 256 chips (TPU v5e pod).
+Multi-pod:  (pod=2, data=16, model=16) over 512 chips; the ``pod`` axis is
+the DCN dimension -- batch (and gradient all-reduce) shard over it, while
+parameters stay within-pod (FSDP over ``data``, TP over ``model``) so no
+per-layer weight gather ever crosses the slow inter-pod links.
+
+``make_production_mesh`` is a function (never a module-level constant) so
+importing this module does not touch jax device state; the dry-run sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any jax
+import to build the placeholder devices.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(*, data: int | None = None, model: int = 1) -> jax.sharding.Mesh:
+    """Small mesh over whatever devices exist (tests / CPU runs)."""
+    n = jax.device_count()
+    data = data if data is not None else max(1, n // model)
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+def axis_sizes(mesh: jax.sharding.Mesh) -> dict[str, int]:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))

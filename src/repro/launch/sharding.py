@@ -1,0 +1,220 @@
+"""Sharding policy: path-based PartitionSpec rules for params/opt/batch/cache.
+
+Policy (single pod, mesh ("data", "model")):
+  * 2-D weight (in, out):    in -> data (FSDP/ZeRO-3), out -> model (TP)
+    ("wo"-style output projections are transposed: model, data)
+  * embeddings (V, D):       V -> model (vocab-parallel), D -> data
+  * MoE experts (E, D, F):   E -> model (expert parallel) when E divides the
+    axis, else fall back to (D -> data, F -> model) tensor parallel
+  * norms / scalars / small vectors: replicated
+  * batch: leading dim over ("pod","data"); KV caches prefer heads -> model,
+    falling back to sequence -> model (flash-decoding style) when GQA head
+    counts don't divide the axis.
+Every rule checks divisibility and degrades to replication, so any
+(arch x shape x mesh) combination produces a valid sharding.
+
+Across pods, parameters are replicated (grads all-reduce over the DCN
+``pod`` axis); only the batch shards over ``pod``.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.launch.mesh import axis_sizes
+
+Params = Any
+
+
+def _ax(mesh_sizes: dict[str, int], name: str, dim: int):
+    """Use mesh axis ``name`` for a dim only if it divides evenly."""
+    if name in mesh_sizes and dim % mesh_sizes[name] == 0:
+        return name
+    return None
+
+
+def _leaf_name(path) -> str:
+    for entry in reversed(path):
+        if hasattr(entry, "key"):
+            return str(entry.key)
+    return ""
+
+
+def _path_has(path, *names: str) -> bool:
+    keys = {str(e.key) for e in path if hasattr(e, "key")}
+    return any(n in keys for n in names)
+
+
+def param_pspec(path, shape: tuple[int, ...], mesh_sizes: dict[str, int]) -> P:
+    """PartitionSpec for one parameter leaf."""
+    name = _leaf_name(path)
+    stacked = _path_has(path, "blocks")  # scan-stacked: leading repeat dim
+    dims = shape[1:] if stacked else shape
+    spec: list = []
+
+    def two_d(d_in: int, d_out: int, *, transposed: bool = False):
+        if transposed:
+            return [_ax(mesh_sizes, "model", d_in), _ax(mesh_sizes, "data", d_out)]
+        return [_ax(mesh_sizes, "data", d_in), _ax(mesh_sizes, "model", d_out)]
+
+    if name in ("embed", "unembed"):
+        # vocab-parallel over model; D replicated: the loss contraction then
+        # needs no per-chunk all-reduce and the token gather all-reduces only
+        # once over model (see EXPERIMENTS.md baseline-tuning notes).
+        spec = [_ax(mesh_sizes, "model", dims[0]), None]
+    elif name in ("wq", "wk", "wv", "wi", "wg", "in_proj"):
+        if len(dims) == 3:  # MoE experts (E, D, F)
+            e, d, f = dims
+            if _ax(mesh_sizes, "model", e):
+                spec = ["model", _ax(mesh_sizes, "data", d), None]
+            else:
+                spec = [None, _ax(mesh_sizes, "data", d), _ax(mesh_sizes, "model", f)]
+        else:
+            spec = two_d(*dims)
+    elif name in ("wo", "out_proj"):
+        if len(dims) == 3:  # MoE experts (E, F, D)
+            e, f, d = dims
+            if _ax(mesh_sizes, "model", e):
+                spec = ["model", None, _ax(mesh_sizes, "data", d)]
+            else:
+                spec = [None, _ax(mesh_sizes, "model", f), _ax(mesh_sizes, "data", d)]
+        else:
+            spec = two_d(*dims, transposed=True)
+    elif name == "router":
+        spec = [_ax(mesh_sizes, "data", dims[0]), None]
+    elif name == "shared_gate":
+        spec = [_ax(mesh_sizes, "data", dims[0]), None]
+    elif name == "conv_w":
+        spec = [None, _ax(mesh_sizes, "model", dims[1])]
+    elif name == "conv_b":
+        spec = [_ax(mesh_sizes, "model", dims[0])]
+    else:
+        # norms, A_log, D, dt_bias, biases: replicate
+        spec = [None] * len(dims)
+
+    if stacked:
+        spec = [None] + spec
+    assert len(spec) == len(shape), (name, shape, spec)
+    return P(*spec)
+
+
+def param_specs(shape_tree: Params, mesh: jax.sharding.Mesh) -> Params:
+    """PartitionSpec pytree matching a params (or grads/moments) pytree."""
+    sizes = axis_sizes(mesh)
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: param_pspec(path, leaf.shape, sizes), shape_tree
+    )
+
+
+def drop_axis(param_spec_tree: Params, axis: str = "data") -> Params:
+    """Remove one mesh axis from every PartitionSpec (gather-once weights)."""
+
+    def strip(spec: P) -> P:
+        out = []
+        for entry in spec:
+            if entry == axis:
+                out.append(None)
+            elif isinstance(entry, tuple):
+                kept = tuple(a for a in entry if a != axis)
+                out.append(kept if kept else None)
+            else:
+                out.append(entry)
+        return P(*out)
+
+    return jax.tree.map(strip, param_spec_tree, is_leaf=lambda x: isinstance(x, P))
+
+
+def opt_state_specs(param_spec_tree: Params) -> Params:
+    return {
+        "m": param_spec_tree,
+        "v": param_spec_tree,
+        "count": P(),
+    }
+
+
+# ----------------------------------------------------------------------------
+# Batch / activations / caches
+# ----------------------------------------------------------------------------
+
+
+def batch_axes(mesh_sizes: dict[str, int], b: int):
+    """Best axes tuple for the global-batch dim."""
+    if "pod" in mesh_sizes:
+        combined = mesh_sizes["pod"] * mesh_sizes["data"]
+        if b % combined == 0:
+            return ("pod", "data")
+    if b % mesh_sizes.get("data", 1) == 0:
+        return ("data",)
+    return None
+
+
+def batch_pspec(shape: tuple[int, ...], mesh_sizes: dict[str, int]) -> P:
+    """Tokens / embeddings / masks: shard the leading (batch) dim."""
+    ax = batch_axes(mesh_sizes, shape[0]) if shape else None
+    return P(ax, *([None] * (len(shape) - 1)))
+
+
+def cache_pspec(path, shape: tuple[int, ...], mesh_sizes: dict[str, int]) -> P:
+    """KV / SSM cache leaves (leading repeat-stack dim)."""
+    name = _leaf_name(path)
+    if name in ("k", "v", "cross_k", "cross_v"):
+        r, b, s, h, hd = shape
+        b_ax = batch_axes(mesh_sizes, b)
+        h_ax = _ax(mesh_sizes, "model", h)
+        s_ax = None
+        if h_ax is None:
+            s_ax = _ax(mesh_sizes, "model", s)
+        if b_ax is None:
+            # batch unshardable (e.g. long_500k b=1): spread seq over all axes
+            if s_ax == "model":
+                if "data" in mesh_sizes and s % (mesh_sizes["data"] * mesh_sizes["model"]) == 0:
+                    s_ax = ("data", "model")
+            elif _ax(mesh_sizes, "data", s):
+                s_ax = ("data",) if s_ax is None else s_ax
+        return P(None, b_ax, s_ax, h_ax, None)
+    if name == "ssm":
+        r, b, h, p_, n = shape
+        b_ax = batch_axes(mesh_sizes, b)
+        h_ax = _ax(mesh_sizes, "data", h) if b_ax is None else _ax(mesh_sizes, "model", h)
+        return P(None, b_ax, h_ax, None, None)
+    if name == "conv":
+        r, b, w, c = shape
+        return P(None, batch_axes(mesh_sizes, b), None, _ax(mesh_sizes, "model", c))
+    return P(*([None] * len(shape)))
+
+
+def cache_specs(shape_tree: Params, mesh: jax.sharding.Mesh) -> Params:
+    sizes = axis_sizes(mesh)
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: cache_pspec(path, leaf.shape, sizes), shape_tree
+    )
+
+
+def batch_specs(shape_tree: Params, mesh: jax.sharding.Mesh) -> Params:
+    sizes = axis_sizes(mesh)
+    return jax.tree.map(lambda leaf: batch_pspec(leaf.shape, sizes), shape_tree)
+
+
+def logits_pspec(mesh_sizes: dict[str, int], b: int, v: int) -> P:
+    return P(batch_axes(mesh_sizes, b), None, _ax(mesh_sizes, "model", v))
+
+
+def to_named(tree_of_pspecs: Params, mesh: jax.sharding.Mesh) -> Params:
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), tree_of_pspecs,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def shaped(tree_of_shapes: Params, tree_of_pspecs: Params, mesh: jax.sharding.Mesh) -> Params:
+    """Attach NamedShardings to a ShapeDtypeStruct tree (dry-run inputs)."""
+    named = to_named(tree_of_pspecs, mesh)
+    return jax.tree.map(
+        lambda sds, sh: jax.ShapeDtypeStruct(sds.shape, sds.dtype, sharding=sh),
+        tree_of_shapes, named,
+    )

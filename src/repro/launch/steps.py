@@ -1,0 +1,151 @@
+"""Step-function factories: train (with microbatch grad-accumulation
+streaming), prefill and decode.  Shared by the dry-run, the trainer and the
+serving engine.
+
+Grad accumulation is Independent-task streaming (paper S4.2) over
+microbatches: each microbatch's forward/backward is a task whose weight
+all-gathers (FSDP) overlap the previous task's compute; gradients are the
+reduction across tasks.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as T
+from repro.models.transformer import ModelConfig
+from repro.optim import adamw
+
+Params = Any
+
+
+def make_loss_fn(cfg: ModelConfig) -> Callable:
+    def loss_fn(params, batch):
+        return T.train_loss(cfg, params, batch)
+
+    return loss_fn
+
+
+def make_train_step(
+    cfg: ModelConfig,
+    opt_cfg: adamw.AdamWConfig,
+    *,
+    accum: int = 1,
+    regather_specs: tuple[Any, Any] | None = None,
+) -> Callable:
+    """train_step(params, opt_state, batch) -> (params, opt_state, metrics).
+
+    ``regather_specs=(full_specs, sharded_specs)`` enables gather-once
+    weights (ZeRO-2-style): parameters are all-gathered off the FSDP axis
+    ONCE per step instead of once per microbatch; per-microbatch gradients
+    reduce-scatter back to the sharded layout.  Collective weight traffic
+    drops from ~3*P*accum (fwd + remat + bwd gathers) to ~P + P*accum (one
+    gather + per-micro grad RS) — EXPERIMENTS.md §Perf "gather-once".
+    """
+    loss_fn = make_loss_fn(cfg)
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(params, opt_state, batch):
+        if regather_specs is not None and accum > 1:
+            full_specs, sharded_specs = regather_specs
+            p_full = jax.lax.with_sharding_constraint(params, full_specs)
+        else:
+            p_full, sharded_specs = params, None
+
+        if accum <= 1:
+            (loss, parts), grads = grad_fn(params, batch)
+        else:
+            def split(x):
+                b = x.shape[0]
+                assert b % accum == 0, (b, accum)
+                return x.reshape((accum, b // accum) + x.shape[1:])
+
+            micro = jax.tree.map(split, batch)
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+            def body(carry, mb):
+                gsum, lsum, auxsum = carry
+                (l, parts), g = grad_fn(p_full, mb)
+                if sharded_specs is not None:
+                    # reduce-scatter the microbatch grads back to FSDP layout
+                    g = jax.lax.with_sharding_constraint(g, sharded_specs)
+                gsum = jax.tree.map(
+                    lambda a, b_: a + b_.astype(jnp.float32), gsum, g)
+                return (gsum, lsum + l, auxsum + parts["aux"]), None
+
+            (gsum, lsum, auxsum), _ = jax.lax.scan(
+                body, (g0, jnp.float32(0.0), jnp.float32(0.0)), micro)
+            grads = jax.tree.map(lambda g: g / accum, gsum)
+            loss = lsum / accum
+            parts = {"ce": loss, "aux": auxsum / accum}
+
+        params, opt_state, om = adamw.apply_updates(opt_cfg, params, grads, opt_state)
+        metrics = {"loss": loss, "ce": parts["ce"], "aux": parts["aux"], **om}
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, *, max_seq: int) -> Callable:
+    """prefill_step(params, batch) -> (last-token logits, caches)."""
+
+    def prefill_step(params, batch):
+        return T.prefill(cfg, params, batch, max_seq=max_seq)
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig) -> Callable:
+    """serve_step(params, caches, tokens (B,1), cur_len) -> (logits, caches)."""
+
+    def serve_step(params, caches, tokens, cur_len):
+        return T.decode_step(cfg, params, tokens, caches, cur_len)
+
+    return serve_step
+
+
+# ----------------------------------------------------------------------------
+# Input shape builders (ShapeDtypeStructs for lowering; arrays for running).
+# ----------------------------------------------------------------------------
+
+
+def batch_shapes(cfg: ModelConfig, *, global_batch: int, seq_len: int) -> dict:
+    """ShapeDtypeStructs for one training/prefill batch."""
+    sds = jax.ShapeDtypeStruct
+    batch = {"tokens": sds((global_batch, seq_len), jnp.int32)}
+    if cfg.is_encoder_decoder:
+        batch["enc_inputs"] = sds(
+            (global_batch, cfg.encoder_seq, cfg.d_model), cfg.compute_dtype)
+    if cfg.prefix_len > 0:
+        batch["prefix_embeds"] = sds(
+            (global_batch, cfg.prefix_len, cfg.d_model), cfg.compute_dtype)
+    return batch
+
+
+def decode_shapes(cfg: ModelConfig, *, global_batch: int, seq_len: int) -> tuple:
+    """(cache shapes, token shapes, cur_len shape) for a serve_step."""
+    cache = jax.eval_shape(
+        lambda: T.init_cache(cfg, global_batch, seq_len,
+                             enc_seq=cfg.encoder_seq or None))
+    sds = jax.ShapeDtypeStruct
+    return cache, sds((global_batch, 1), jnp.int32), sds((), jnp.int32)
+
+
+def make_batch(cfg: ModelConfig, key, *, global_batch: int, seq_len: int) -> dict:
+    """Concrete random batch matching ``batch_shapes`` (for real runs)."""
+    ks = jax.random.split(key, 3)
+    batch = {
+        "tokens": jax.random.randint(
+            ks[0], (global_batch, seq_len), 0, cfg.vocab_size, jnp.int32)
+    }
+    if cfg.is_encoder_decoder:
+        batch["enc_inputs"] = 0.1 * jax.random.normal(
+            ks[1], (global_batch, cfg.encoder_seq, cfg.d_model), cfg.compute_dtype)
+    if cfg.prefix_len > 0:
+        batch["prefix_embeds"] = 0.1 * jax.random.normal(
+            ks[2], (global_batch, cfg.prefix_len, cfg.d_model), cfg.compute_dtype)
+    return batch

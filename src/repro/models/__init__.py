@@ -1,0 +1,7 @@
+"""Model substrate: attention, MoE, Mamba2/SSD, and the composable
+multi-architecture transformer backbone."""
+
+from repro.models import attention, layers, mamba, moe, transformer
+from repro.models.transformer import LayerSpec, ModelConfig
+
+__all__ = ["attention", "layers", "mamba", "moe", "transformer", "LayerSpec", "ModelConfig"]

@@ -1,0 +1,502 @@
+"""Attention: streamed (flash-style) reference implementation + decode path.
+
+``flash_attention_ref`` is the pure-JAX oracle/production-CPU twin of the
+Pallas kernel in ``repro.kernels.flash_attention``.  It streams over
+(q-block, kv-block) *task pairs* with an online softmax -- the paper's
+Independent/False-dependent streaming applied to attention:
+
+  * the KV blocks are read-only data shared by all q-block tasks (RAR --
+    false dependence, handled by replaying KV blocks per q block);
+  * only block pairs that can contain unmasked entries are enumerated
+    (causal lower triangle / sliding-window band), so HLO FLOPs match the
+    real work -- no S^2 waste on masked blocks.  This matters for the
+    roofline: masked-out compute would otherwise inflate the compute term.
+
+Supports GQA (grouped KV heads), RoPE (applied by the caller), logit
+softcap (gemma2), sliding windows (gemma2 local layers, mixtral), prefix-LM
+bidirectional masking (paligemma) and bidirectional encoders (whisper).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import layers
+
+Params = dict[str, Any]
+
+NEG_INF = -1e30
+
+
+def _pick_chunk(s: int, chunk: int, *, at_least: int = 0) -> int:
+    """Largest block size <= chunk dividing s (and >= the prefix if any)."""
+    for c in range(min(chunk, s), 0, -1):
+        if s % c == 0 and (at_least == 0 or c >= at_least):
+            return c
+    for c in range(max(1, at_least), s + 1):
+        if s % c == 0:
+            return c
+    return s
+
+
+def _block_pairs(
+    n_q: int, n_k: int, *, causal: bool, window: int, chunk_q: int,
+    chunk_k: int, q_offset: int = 0, prefix_len: int = 0,
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Static (qi, kj) block-pair lists + deduplicated block masks.
+
+    causal: keep pairs whose youngest q >= oldest k.  window > 0: keep block
+    pairs overlapping the band q - k < window.  Bidirectional: all pairs.
+
+    Masks are computed at trace time in numpy and deduplicated: almost all
+    pairs share one of a handful of patterns (all-valid interior blocks, the
+    triangular diagonal block, band-edge blocks), so the kernel gathers a
+    (U, cq, ck) constant instead of recomputing masks per step -- which XLA
+    would otherwise hoist out of the loop as a giant (n_pairs, B, H, cq, ck)
+    buffer.
+
+    Returns (qi, kj, mask_id, masks) device arrays.
+    """
+    pairs: list[tuple[int, int]] = []
+    mask_ids: list[int] = []
+    unique: dict[bytes, int] = {}
+    masks: list[np.ndarray] = []
+    oq = np.arange(chunk_q)
+    ok_ = np.arange(chunk_k)
+    for qi in range(n_q):
+        for kj in range(n_k):
+            q_lo = qi * chunk_q + q_offset
+            q_hi = q_lo + chunk_q - 1
+            k_lo = kj * chunk_k
+            k_hi = k_lo + chunk_k - 1
+            if causal and k_lo > q_hi and not (prefix_len > 0 and k_lo < prefix_len):
+                continue
+            if window > 0 and q_lo - k_hi >= window:
+                continue
+            qpos = q_lo + oq
+            kpos = k_lo + ok_
+            m = np.ones((chunk_q, chunk_k), bool)
+            if causal:
+                m = qpos[:, None] >= kpos[None, :]
+                if prefix_len > 0:
+                    m = m | (kpos[None, :] < prefix_len)
+            if window > 0:
+                m = m & (qpos[:, None] - kpos[None, :] < window)
+            if not m.any():
+                continue
+            key = m.tobytes()
+            if key not in unique:
+                unique[key] = len(masks)
+                masks.append(m)
+            pairs.append((qi, kj))
+            mask_ids.append(unique[key])
+    qs = jnp.asarray([p[0] for p in pairs], jnp.int32)
+    ks = jnp.asarray([p[1] for p in pairs], jnp.int32)
+    ids = jnp.asarray(mask_ids, jnp.int32)
+    # Additive f32 masks (0 / NEG_INF): an additive mask stays fused into the
+    # score computation, whereas a boolean select's broadcast gets hoisted by
+    # XLA into a (n_pairs, B, H, cq, ck) loop-invariant buffer.
+    addm = np.where(np.stack(masks), 0.0, NEG_INF).astype(np.float32)
+    return qs, ks, ids, jnp.asarray(addm)
+
+
+def _broadcast_kv(k: jax.Array, v: jax.Array, g: int) -> tuple[jax.Array, jax.Array]:
+    """(B,S,Hkv,hd) -> (B,S,Hkv*g,hd): replicate KV across each GQA group."""
+    b, s, hkv, hd = k.shape
+    k = jnp.broadcast_to(k[:, :, :, None], (b, s, hkv, g, hd)).reshape(b, s, hkv * g, hd)
+    v = jnp.broadcast_to(v[:, :, :, None], (b, s, hkv, g, hd)).reshape(b, s, hkv * g, hd)
+    return k, v
+
+
+def flash_attention_ref(
+    q: jax.Array,  # (B, Sq, H, hd) flat query heads (H = Hkv * G)
+    k: jax.Array,  # (B, Sk, Hkv, hd)
+    v: jax.Array,  # (B, Sk, Hkv, hd)
+    *,
+    chunk: int = 512,
+    causal: bool = True,
+    window: int = 0,
+    prefix_len: int = 0,
+    softcap_val: float = 0.0,
+    scale: float | None = None,
+    q_offset: int = 0,
+) -> jax.Array:
+    """Streamed online-softmax attention over block pairs, with a flash-style
+    custom VJP: the backward pass *recomputes* P per block pair instead of
+    saving an (n_pairs, B, H, cq, ck) stack -- the streaming trade (recompute
+    over store) that keeps the memory roofline term at O(S) per layer.
+    """
+    hd = q.shape[-1]
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+    cfg = (int(chunk), bool(causal), int(window), int(prefix_len),
+           float(softcap_val), float(scale), int(q_offset))
+    return _flash(cfg, q, k, v)
+
+
+def _flash_setup(cfg, q_shape, k_shape):
+    chunk, causal, window, prefix_len, softcap_val, scale, q_offset = cfg
+    b, sq, h, hd = q_shape
+    sk = k_shape[1]
+    chunk_q = _pick_chunk(sq, chunk, at_least=prefix_len)
+    chunk_k = _pick_chunk(sk, chunk)
+    n_q, n_k = sq // chunk_q, sk // chunk_k
+    if prefix_len > 0:
+        assert chunk_q >= prefix_len, "attn chunk must cover the bidirectional prefix"
+    pairs = _block_pairs(
+        n_q, n_k, causal=causal, window=window, chunk_q=chunk_q,
+        chunk_k=chunk_k, q_offset=q_offset, prefix_len=prefix_len)
+    return chunk_q, chunk_k, n_q, n_k, pairs
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _flash(cfg, q, k, v):
+    out, _ = _flash_fwd_impl(cfg, q, k, v)
+    return out
+
+
+def _flash_fwd_impl(cfg, q, k, v):
+    chunk, causal, window, prefix_len, softcap_val, scale, q_offset = cfg
+    b, sq, h, hd = q.shape
+    g = h // k.shape[2]
+    chunk_q, chunk_k, n_q, n_k, (qi_arr, kj_arr, mask_ids, masks) = _flash_setup(
+        cfg, q.shape, k.shape)
+
+    # Flatten GQA groups to full heads and broadcast K/V across each group:
+    # with h = n_heads the attention einsums shard over the TP axis even when
+    # hkv doesn't divide it (the broadcast of replicated KV is free; the
+    # compute then partitions by query head).
+    kf, vf = _broadcast_kv(k, v, g)
+
+    # Q/K/V stay in storage dtype (bf16 on TPU): the MXU consumes bf16 with
+    # f32 accumulation; the online-softmax state (m, l, acc) stays f32.
+    qb = q.reshape(b, n_q, chunk_q, h, hd)
+    kb = kf.reshape(b, n_k, chunk_k, h, hd)
+    vb = vf.reshape(b, n_k, chunk_k, h, hd)
+
+    m0 = jnp.full((n_q, b, chunk_q, h), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((n_q, b, chunk_q, h), jnp.float32)
+    acc0 = jnp.zeros((n_q, b, chunk_q, h, hd), jnp.float32)
+
+    def step(carry, pair):
+        m, l, acc = carry
+        qi, kj, mid = pair
+        qc = jax.lax.dynamic_index_in_dim(qb, qi, axis=1, keepdims=False)
+        kc = jax.lax.dynamic_index_in_dim(kb, kj, axis=1, keepdims=False)
+        vc = jax.lax.dynamic_index_in_dim(vb, kj, axis=1, keepdims=False)
+
+        s = jnp.einsum("bqhd,bkhd->bhqk", qc, kc,
+                       preferred_element_type=jnp.float32) * scale
+        s = layers.softcap(s, softcap_val)
+
+        ok = jax.lax.dynamic_index_in_dim(masks, mid, axis=0, keepdims=False)
+        s = s + ok[None, None]
+
+        m_old = jax.lax.dynamic_index_in_dim(m, qi, axis=0, keepdims=False)
+        l_old = jax.lax.dynamic_index_in_dim(l, qi, axis=0, keepdims=False)
+        acc_old = jax.lax.dynamic_index_in_dim(acc, qi, axis=0, keepdims=False)
+
+        s_max = jnp.moveaxis(s.max(axis=-1), 1, -1)  # (b, q, h)
+        m_new = jnp.maximum(m_old, s_max)
+        # p: (b, h, q, k); alpha rescales the old accumulator.
+        p = jnp.exp(s - jnp.moveaxis(m_new, -1, 1)[..., None])
+        alpha = jnp.exp(m_old - m_new)
+        l_new = alpha * l_old + jnp.moveaxis(p.sum(-1), 1, -1)
+        pv = jnp.einsum("bhqk,bkhd->bqhd", p.astype(vc.dtype), vc,
+                        preferred_element_type=jnp.float32)
+        acc_new = alpha[..., None] * acc_old + pv
+
+        m = jax.lax.dynamic_update_index_in_dim(m, m_new, qi, axis=0)
+        l = jax.lax.dynamic_update_index_in_dim(l, l_new, qi, axis=0)
+        acc = jax.lax.dynamic_update_index_in_dim(acc, acc_new, qi, axis=0)
+        return (m, l, acc), None
+
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, acc0), (qi_arr, kj_arr, mask_ids))
+    l_safe = jnp.where(l == 0.0, 1.0, l)
+    out = acc / l_safe[..., None]  # (n_q, b, chunk_q, h, hd)
+    out = jnp.moveaxis(out, 0, 1).reshape(b, sq, h, hd).astype(q.dtype)
+    lse = m + jnp.log(jnp.maximum(l, 1e-30))  # (n_q, b, chunk_q, h) f32
+    return out, lse
+
+
+def _flash_fwd(cfg, q, k, v):
+    out, lse = _flash_fwd_impl(cfg, q, k, v)
+    return out, (q, k, v, out, lse)
+
+
+def _flash_bwd(cfg, res, dout):
+    chunk, causal, window, prefix_len, softcap_val, scale, q_offset = cfg
+    q, k, v, out, lse = res
+    b, sq, h, hd = q.shape
+    sk, hkv = k.shape[1], k.shape[2]
+    g = h // hkv
+    chunk_q, chunk_k, n_q, n_k, (qi_arr, kj_arr, mask_ids, masks) = _flash_setup(
+        cfg, q.shape, k.shape)
+
+    kf, vf = _broadcast_kv(k, v, g)
+    qb = q.reshape(b, n_q, chunk_q, h, hd)
+    kb = kf.reshape(b, n_k, chunk_k, h, hd)
+    vb = vf.reshape(b, n_k, chunk_k, h, hd)
+    dob = dout.reshape(b, n_q, chunk_q, h, hd)
+
+    # D_i = rowsum(dout * out), one f32 scalar per q row.
+    delta = jnp.sum(dout.astype(jnp.float32) * out.astype(jnp.float32), axis=-1)
+    delta = delta.reshape(b, n_q, chunk_q, h)
+
+    dq0 = jnp.zeros((b, n_q, chunk_q, h, hd), jnp.float32)
+    dk0 = jnp.zeros((b, n_k, chunk_k, h, hd), jnp.float32)
+    dv0 = jnp.zeros((b, n_k, chunk_k, h, hd), jnp.float32)
+
+    def step(carry, pair):
+        dq, dk, dv = carry
+        qi, kj, mid = pair
+        qc = jax.lax.dynamic_index_in_dim(qb, qi, axis=1, keepdims=False)
+        kc = jax.lax.dynamic_index_in_dim(kb, kj, axis=1, keepdims=False)
+        vc = jax.lax.dynamic_index_in_dim(vb, kj, axis=1, keepdims=False)
+        do = jax.lax.dynamic_index_in_dim(dob, qi, axis=1, keepdims=False)
+        lse_i = jax.lax.dynamic_index_in_dim(lse, qi, axis=0, keepdims=False)
+        dlt_i = jax.lax.dynamic_index_in_dim(delta, qi, axis=1, keepdims=False)
+
+        s_raw = jnp.einsum("bqhd,bkhd->bhqk", qc, kc,
+                           preferred_element_type=jnp.float32) * scale
+        s_cap = layers.softcap(s_raw, softcap_val)
+        ok = jax.lax.dynamic_index_in_dim(masks, mid, axis=0, keepdims=False)
+        s_m = s_cap + ok[None, None]
+        # flash backward: P recomputed per block pair, never materialized
+        p = jnp.exp(s_m - jnp.moveaxis(lse_i, -1, 1)[..., None])  # (b,h,q,k)
+
+        pb = p.astype(vc.dtype)
+        dv_c = jnp.einsum("bhqk,bqhd->bkhd", pb, do,
+                          preferred_element_type=jnp.float32)
+        dp = jnp.einsum("bqhd,bkhd->bhqk", do, vc,
+                        preferred_element_type=jnp.float32)
+        ds = p * (dp - jnp.moveaxis(dlt_i, -1, 1)[..., None])
+        if softcap_val > 0.0:
+            ds = ds * (1.0 - jnp.square(s_cap / softcap_val))
+        ds = ds * scale
+        dsb = ds.astype(qc.dtype)
+        dq_c = jnp.einsum("bhqk,bkhd->bqhd", dsb, kc,
+                          preferred_element_type=jnp.float32)
+        dk_c = jnp.einsum("bhqk,bqhd->bkhd", dsb, qc,
+                          preferred_element_type=jnp.float32)
+
+        dq = jax.lax.dynamic_update_index_in_dim(
+            dq, jax.lax.dynamic_index_in_dim(dq, qi, 1, keepdims=False) + dq_c,
+            qi, axis=1)
+        dk = jax.lax.dynamic_update_index_in_dim(
+            dk, jax.lax.dynamic_index_in_dim(dk, kj, 1, keepdims=False) + dk_c,
+            kj, axis=1)
+        dv = jax.lax.dynamic_update_index_in_dim(
+            dv, jax.lax.dynamic_index_in_dim(dv, kj, 1, keepdims=False) + dv_c,
+            kj, axis=1)
+        return (dq, dk, dv), None
+
+    (dq, dk, dv), _ = jax.lax.scan(step, (dq0, dk0, dv0), (qi_arr, kj_arr, mask_ids))
+
+    dq = dq.reshape(b, sq, h, hd).astype(q.dtype)
+    # fold the GQA broadcast: sum gradients over each group
+    dk = dk.reshape(b, sk, hkv, g, hd).sum(axis=3).astype(k.dtype)
+    dv = dv.reshape(b, sk, hkv, g, hd).sum(axis=3).astype(v.dtype)
+    return dq, dk, dv
+
+
+_flash.defvjp(_flash_fwd, _flash_bwd)
+
+
+def decode_attention(
+    q: jax.Array,  # (B, 1, H, hd)
+    k_cache: jax.Array,  # (B, S, Hkv, hd)
+    v_cache: jax.Array,  # (B, S, Hkv, hd)
+    *,
+    cur_len: jax.Array,  # scalar int32: index of the token being generated
+    window: int = 0,
+    softcap_val: float = 0.0,
+    scale: float | None = None,
+) -> jax.Array:
+    """Single-token attention against a (possibly ring-buffered) KV cache."""
+    b, s, hkv, hd = k_cache.shape
+    g = q.shape[2] // hkv
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+    kf, vf = _broadcast_kv(k_cache, v_cache, g)  # (B,S,H,hd)
+
+    sc = jnp.einsum("bqhd,bkhd->bhqk", q, kf.astype(q.dtype),
+                    preferred_element_type=jnp.float32) * scale
+    sc = layers.softcap(sc, softcap_val)
+    slot = jnp.arange(s)
+    if window > 0 and s == window:
+        # Ring buffer: slot s holds original position p ≡ s (mod window) with
+        # p <= cur_len; valid once written.
+        written = (slot <= cur_len) | (cur_len >= window)
+        ok = written
+    else:
+        ok = slot <= cur_len
+        if window > 0:
+            ok = ok & (cur_len - slot < window)
+    sc = jnp.where(ok[None, None, None, :], sc, NEG_INF)
+    p = jax.nn.softmax(sc, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p.astype(vf.dtype), vf,
+                     preferred_element_type=jnp.float32)
+    return out.astype(q.dtype)
+
+
+# ----------------------------------------------------------------------------
+# Full multi-head attention layer (projections + rope + cache handling).
+# ----------------------------------------------------------------------------
+
+
+def attention_init(
+    key,
+    *,
+    d_model: int,
+    n_heads: int,
+    n_kv_heads: int,
+    head_dim: int,
+    dtype,
+    qk_norm: bool = False,
+    cross: bool = False,
+) -> Params:
+    ks = jax.random.split(key, 4)
+    p: Params = {
+        "wq": layers.dense_init(ks[0], (d_model, n_heads * head_dim), dtype),
+        "wk": layers.dense_init(ks[1], (d_model, n_kv_heads * head_dim), dtype),
+        "wv": layers.dense_init(ks[2], (d_model, n_kv_heads * head_dim), dtype),
+        "wo": layers.dense_init(ks[3], (n_heads * head_dim, d_model), dtype),
+    }
+    if qk_norm:
+        p["q_norm"] = layers.rmsnorm_init(head_dim, dtype)
+        p["k_norm"] = layers.rmsnorm_init(head_dim, dtype)
+    return p
+
+
+def attention_apply(
+    p: Params,
+    x: jax.Array,  # (B, S, D)
+    *,
+    n_heads: int,
+    n_kv_heads: int,
+    head_dim: int,
+    positions: jax.Array | None = None,  # (S,) absolute positions; None = no rope
+    rope_theta: float = 1e4,
+    causal: bool = True,
+    window: int = 0,
+    prefix_len: int = 0,
+    softcap_val: float = 0.0,
+    scale: float | None = None,
+    chunk: int = 512,
+    qk_norm: bool = False,
+    kv_source: jax.Array | None = None,  # cross-attention keys/values source
+    cache: dict[str, jax.Array] | None = None,  # decode: {"k","v"} (B,S,hkv,hd)
+    cur_len: jax.Array | None = None,  # decode: scalar current position
+    q_offset: int = 0,  # static chunk offset for streamed (chunked) prefill
+) -> tuple[jax.Array, dict[str, jax.Array] | None]:
+    """Returns (output (B,S,D), updated cache or None)."""
+    b, s, d = x.shape
+    kv_in = x if kv_source is None else kv_source
+
+    # Flat head layout: the model axis shards n_heads * head_dim cleanly.
+    q = (x @ p["wq"]).reshape(b, s, n_heads, head_dim)
+    if cache is not None and kv_source is not None and "k" in cache and cur_len is None:
+        # Cross-attention decode: KV precomputed once at prefill.
+        k, v = cache["k"], cache["v"]
+    else:
+        k = (kv_in @ p["wk"]).reshape(b, kv_in.shape[1], n_kv_heads, head_dim)
+        v = (kv_in @ p["wv"]).reshape(b, kv_in.shape[1], n_kv_heads, head_dim)
+
+    if qk_norm:
+        q = layers.rmsnorm(p["q_norm"], q)
+        k = layers.rmsnorm(p["k_norm"], k)
+
+    if positions is not None and kv_source is None:
+        sin, cos = layers.rope_angles(positions, head_dim, rope_theta)
+        q = layers.apply_rope(q, sin[None], cos[None])
+        if cur_len is None or k.shape[1] == s:  # fresh K (not from cache)
+            k = layers.apply_rope(k, sin[None], cos[None])
+
+    new_cache = cache
+    if cur_len is not None and cache is not None and kv_source is None:
+        # Decode: write this step's K/V into the cache (ring-buffered if SWA).
+        s_cache = cache["k"].shape[1]
+        if window > 0 and s_cache == window:
+            write_at = jnp.mod(cur_len, window)
+        else:
+            write_at = cur_len
+        k_cache = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype), (0, write_at, 0, 0))
+        v_cache = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype), (0, write_at, 0, 0))
+        new_cache = {"k": k_cache, "v": v_cache}
+        out = decode_attention(
+            q, k_cache, v_cache, cur_len=cur_len, window=window,
+            softcap_val=softcap_val, scale=scale,
+        )
+    elif q_offset > 0 and cache is not None and kv_source is None:
+        # Streamed (chunked) prefill continuation: write this chunk's K/V at
+        # the static offset, then attend against the whole context so far --
+        # the True-dependent KV handoff between prefill tasks (paper S4.2).
+        s_cache = cache["k"].shape[1]
+        assert s_cache >= q_offset + s, "streamed prefill needs a full cache"
+        k_cache = jax.lax.dynamic_update_slice(
+            cache["k"], k.astype(cache["k"].dtype), (0, q_offset, 0, 0))
+        v_cache = jax.lax.dynamic_update_slice(
+            cache["v"], v.astype(cache["v"].dtype), (0, q_offset, 0, 0))
+        new_cache = {"k": k_cache, "v": v_cache}
+        k_ctx = k_cache[:, : q_offset + s]
+        v_ctx = v_cache[:, : q_offset + s]
+        out = flash_attention_ref(
+            q, k_ctx, v_ctx, chunk=chunk, causal=causal, window=window,
+            prefix_len=prefix_len, softcap_val=softcap_val, scale=scale,
+            q_offset=q_offset,
+        )
+    else:
+        out = flash_attention_ref(
+            q, k, v, chunk=chunk, causal=causal and kv_source is None,
+            window=window, prefix_len=prefix_len, softcap_val=softcap_val,
+            scale=scale,
+        )
+        if cache is not None:
+            # Prefill: store the rope'd K and V.  If the cache is a ring
+            # buffer (SWA window < prompt), keep only the last `window`
+            # positions, rotated so position p lands in slot p % window.
+            s_cache = cache["k"].shape[1]
+            k_w, v_w = k, v
+            if s_cache < k.shape[1]:
+                k_w = jnp.roll(k[:, -s_cache:], s % s_cache, axis=1)
+                v_w = jnp.roll(v[:, -s_cache:], s % s_cache, axis=1)
+            k_cache = jax.lax.dynamic_update_slice(
+                cache["k"], k_w.astype(cache["k"].dtype), (0, 0, 0, 0))
+            v_cache = jax.lax.dynamic_update_slice(
+                cache["v"], v_w.astype(cache["v"].dtype), (0, 0, 0, 0))
+            new_cache = {"k": k_cache, "v": v_cache}
+
+    out = out.reshape(b, s, n_heads * head_dim)
+    return out @ p["wo"], new_cache
+
+
+def naive_attention(
+    q: jax.Array, k: jax.Array, v: jax.Array, *,
+    causal: bool = True, window: int = 0, prefix_len: int = 0,
+    softcap_val: float = 0.0, scale: float | None = None, q_offset: int = 0,
+) -> jax.Array:
+    """O(S^2)-memory oracle for tests (materializes the score matrix)."""
+    b, sq, h, hd = q.shape
+    sk, hkv = k.shape[1], k.shape[2]
+    k, v = _broadcast_kv(k, v, h // hkv)
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32)) * scale
+    s = layers.softcap(s, softcap_val)
+    qpos = jnp.arange(sq) + q_offset
+    kpos = jnp.arange(sk)
+    ok = jnp.ones((sq, sk), bool)
+    if causal:
+        ok = qpos[:, None] >= kpos[None, :]
+        if prefix_len > 0:
+            ok = ok | (kpos[None, :] < prefix_len)
+    if window > 0:
+        ok = ok & (qpos[:, None] - kpos[None, :] < window)
+    s = jnp.where(ok[None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)

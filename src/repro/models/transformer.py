@@ -1,0 +1,525 @@
+"""Composable multi-architecture LM backbone.
+
+One config system covers all 10 assigned architectures: dense GQA
+transformers (internlm2, phi4, qwen3), gemma2 (alternating local/global,
+softcaps, sandwich norms), MoE (mixtral, qwen2-moe), Mamba2 (SSM), Jamba
+(hybrid mamba/attention + MoE), Whisper (encoder-decoder, stub audio
+frontend) and PaliGemma (prefix-LM VLM, stub vision frontend).
+
+Layers are described by a repeating ``layer_unit`` (a tuple of LayerSpec);
+parameters of each unit are stacked over the repeat axis and executed with
+``lax.scan`` (keeps HLO size O(1) in depth; remat applies per repeat).
+
+Streaming (the paper's technique) appears here as:
+  * chunked flash attention (repro.models.attention) -- block-pair streams;
+  * chunked CE loss (repro.models.layers) -- Independent-task streams;
+  * chunked MoE dispatch (repro.models.moe) -- a2a/compute pipelining;
+  * chunked SSD scan (repro.models.mamba) -- True-dependent state handoff;
+  * chunked prefill (repro.runtime.serving) -- built on ``prefill`` here.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn_lib
+from repro.models import layers, mamba, meshutil, moe
+
+Params = dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerSpec:
+    mixer: str = "attn"  # "attn" | "attn_local" | "mamba" | "none"
+    ffn: str = "dense"  # "dense" | "moe" | "none"
+    cross_attn: bool = False
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    d_model: int
+    n_layers: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 128
+    layer_unit: tuple[LayerSpec, ...] = (LayerSpec(),)
+
+    # attention
+    use_rope: bool = True
+    rope_theta: float = 1e4
+    qk_norm: bool = False
+    attn_softcap: float = 0.0
+    final_softcap: float = 0.0
+    sliding_window: int = 0  # window for "attn_local" mixers (and mixtral SWA)
+    query_scale: float | None = None  # None -> 1/sqrt(head_dim)
+    sandwich_norm: bool = False  # gemma2 post-attn/post-ffn norms
+    sinusoidal_pos: bool = False  # whisper-style absolute positions
+
+    # ffn
+    ffn_kind: str = "swiglu"  # "swiglu" | "geglu" | "gelu_mlp"
+
+    # moe
+    n_experts: int = 0
+    top_k: int = 2
+    expert_d_ff: int | None = None
+    n_shared_experts: int = 0
+    shared_d_ff: int | None = None
+    capacity_factor: float = 1.25
+    moe_chunk: int = 1024
+    router_aux_coef: float = 0.01
+    moe_impl: str = "gather"  # "gather" (optimized) | "einsum" (baseline)
+    expert_shards: int = 1  # virtual-expert TP folded into EP
+    n_experts_pad: int | None = None  # dead expert slots for EP divisibility
+
+    # mamba
+    ssm_state: int = 128
+    mamba_headdim: int = 64
+    mamba_expand: int = 2
+    ssd_chunk: int = 64
+
+    # encoder-decoder (whisper)
+    n_encoder_layers: int = 0
+    encoder_seq: int = 0  # stub frontend: frames arrive pre-embedded
+
+    # vlm (paligemma)
+    prefix_len: int = 0  # image patch embeddings prepended to text
+
+    # embeddings / head
+    tie_embeddings: bool = False
+    embed_scale: bool = False  # gemma: h *= sqrt(d_model)
+    vocab_pad_to: int = 256
+
+    # compute
+    param_dtype: Any = jnp.bfloat16
+    compute_dtype: Any = jnp.bfloat16
+    attn_chunk: int = 512
+    loss_chunk: int = 512
+    remat: str = "dots"  # "none" | "dots" | "full"
+    scan_layers: bool = True
+
+    @property
+    def padded_vocab(self) -> int:
+        v, m = self.vocab_size, self.vocab_pad_to
+        return ((v + m - 1) // m) * m
+
+    @property
+    def n_repeats(self) -> int:
+        assert self.n_layers % len(self.layer_unit) == 0, (
+            self.n_layers, len(self.layer_unit))
+        return self.n_layers // len(self.layer_unit)
+
+    @property
+    def is_encoder_decoder(self) -> bool:
+        return self.n_encoder_layers > 0
+
+    def spec_window(self, spec: LayerSpec) -> int:
+        return self.sliding_window if spec.mixer == "attn_local" else (
+            self.sliding_window if self.sliding_window and all(
+                s.mixer != "attn_local" for s in self.layer_unit) else 0)
+
+    def param_count(self) -> int:
+        """Total parameter count (exact, from shapes)."""
+        shapes = jax.eval_shape(lambda k: init_params(self, k), jax.random.PRNGKey(0))
+        return sum(int(math.prod(x.shape)) for x in jax.tree.leaves(shapes))
+
+    def active_param_count(self) -> int:
+        """Parameters touched per token (MoE: top_k + shared experts only;
+        dead padding experts are never touched)."""
+        total = self.param_count()
+        if self.n_experts == 0:
+            return total
+        e_ff = self.expert_d_ff or self.d_ff
+        per_expert = 3 * self.d_model * e_ff
+        n_moe_layers = sum(
+            1 for s in self.layer_unit if s.ffn == "moe") * self.n_repeats
+        stored = self.n_experts_pad or self.n_experts
+        inactive = n_moe_layers * (stored - self.top_k) * per_expert
+        return total - inactive
+
+
+# ----------------------------------------------------------------------------
+# Init
+# ----------------------------------------------------------------------------
+
+
+def _layer_init(cfg: ModelConfig, spec: LayerSpec, key) -> Params:
+    ks = jax.random.split(key, 8)
+    p: Params = {}
+    dt = cfg.param_dtype
+    if spec.mixer in ("attn", "attn_local"):
+        p["mixer_norm"] = layers.rmsnorm_init(cfg.d_model, dt)
+        p["mixer"] = attn_lib.attention_init(
+            ks[0], d_model=cfg.d_model, n_heads=cfg.n_heads,
+            n_kv_heads=cfg.n_kv_heads, head_dim=cfg.head_dim, dtype=dt,
+            qk_norm=cfg.qk_norm)
+        if cfg.sandwich_norm:
+            p["post_mixer_norm"] = layers.rmsnorm_init(cfg.d_model, dt)
+    elif spec.mixer == "mamba":
+        p["mixer_norm"] = layers.rmsnorm_init(cfg.d_model, dt)
+        p["mixer"] = mamba.mamba_init(
+            ks[0], d_model=cfg.d_model, expand=cfg.mamba_expand,
+            headdim=cfg.mamba_headdim, d_state=cfg.ssm_state, dtype=dt)
+    if spec.cross_attn:
+        p["cross_norm"] = layers.rmsnorm_init(cfg.d_model, dt)
+        p["cross"] = attn_lib.attention_init(
+            ks[1], d_model=cfg.d_model, n_heads=cfg.n_heads,
+            n_kv_heads=cfg.n_kv_heads, head_dim=cfg.head_dim, dtype=dt)
+    if spec.ffn == "dense":
+        p["ffn_norm"] = layers.rmsnorm_init(cfg.d_model, dt)
+        p["ffn"] = layers.ffn_init(ks[2], cfg.d_model, cfg.d_ff, dt, kind=cfg.ffn_kind)
+        if cfg.sandwich_norm:
+            p["post_ffn_norm"] = layers.rmsnorm_init(cfg.d_model, dt)
+    elif spec.ffn == "moe":
+        p["ffn_norm"] = layers.rmsnorm_init(cfg.d_model, dt)
+        p["ffn"] = moe.moe_init(
+            ks[2], d_model=cfg.d_model, d_ff=cfg.expert_d_ff or cfg.d_ff,
+            n_experts=cfg.n_experts, n_shared_experts=cfg.n_shared_experts,
+            shared_d_ff=cfg.shared_d_ff, dtype=dt,
+            expert_shards=cfg.expert_shards, n_experts_pad=cfg.n_experts_pad)
+    return p
+
+
+def _block_init(cfg: ModelConfig, key, *, unit=None) -> Params:
+    unit = unit if unit is not None else cfg.layer_unit
+    ks = jax.random.split(key, len(unit))
+    return {f"layer{i}": _layer_init(cfg, spec, ks[i]) for i, spec in enumerate(unit)}
+
+
+_ENC_UNIT = (LayerSpec(mixer="attn", ffn="dense"),)
+
+
+def init_params(cfg: ModelConfig, key) -> Params:
+    keys = jax.random.split(key, 6)
+    v = cfg.padded_vocab
+    p: Params = {
+        "embed": layers.embed_init(keys[0], (v, cfg.d_model), cfg.param_dtype),
+        "final_norm": layers.rmsnorm_init(cfg.d_model, cfg.param_dtype),
+    }
+    if not cfg.tie_embeddings:
+        p["unembed"] = layers.embed_init(keys[1], (v, cfg.d_model), cfg.param_dtype)
+
+    block_keys = jax.random.split(keys[2], cfg.n_repeats)
+    p["blocks"] = jax.vmap(lambda k: _block_init(cfg, k))(block_keys)
+
+    if cfg.is_encoder_decoder:
+        enc_keys = jax.random.split(keys[3], cfg.n_encoder_layers)
+        enc_cfg = dataclasses.replace(cfg, ffn_kind="gelu_mlp")
+        p["encoder"] = {
+            "blocks": jax.vmap(lambda k: _block_init(enc_cfg, k, unit=_ENC_UNIT))(enc_keys),
+            "final_norm": layers.rmsnorm_init(cfg.d_model, cfg.param_dtype),
+        }
+    return p
+
+
+# ----------------------------------------------------------------------------
+# Caches
+# ----------------------------------------------------------------------------
+
+
+def init_cache(cfg: ModelConfig, bsz: int, max_seq: int, *, enc_seq: int | None = None,
+               ring: bool = True) -> Params:
+    """Decode caches, stacked over the repeat axis per unit position.
+
+    ``ring=True`` bounds SWA layers' caches at the window size (ring
+    buffer -- memory-optimal decode); ``ring=False`` allocates full-length
+    caches (required by the streamed-prefill continuation path).
+    """
+    r = cfg.n_repeats
+    dt = cfg.compute_dtype
+    cache: Params = {"blocks": {}}
+    for i, spec in enumerate(cfg.layer_unit):
+        c: Params = {}
+        if spec.mixer in ("attn", "attn_local"):
+            window = cfg.sliding_window if (
+                spec.mixer == "attn_local" or (
+                    cfg.sliding_window > 0 and all(s.mixer != "attn_local" for s in cfg.layer_unit)
+                )
+            ) else 0
+            s_cache = min(window, max_seq) if (window > 0 and ring) else max_seq
+            shape = (r, bsz, s_cache, cfg.n_kv_heads, cfg.head_dim)
+            c["k"] = jnp.zeros(shape, dt)
+            c["v"] = jnp.zeros(shape, dt)
+        elif spec.mixer == "mamba":
+            d_inner, n_heads, conv_dim = mamba.mamba_dims(
+                cfg.d_model, expand=cfg.mamba_expand, headdim=cfg.mamba_headdim,
+                d_state=cfg.ssm_state)
+            c["ssm"] = jnp.zeros((r, bsz, n_heads, cfg.mamba_headdim, cfg.ssm_state), jnp.float32)
+            c["conv"] = jnp.zeros((r, bsz, mamba.CONV_WIDTH - 1, conv_dim), dt)
+        if spec.cross_attn:
+            es = enc_seq or cfg.encoder_seq
+            shape = (r, bsz, es, cfg.n_kv_heads, cfg.head_dim)
+            c["cross_k"] = jnp.zeros(shape, dt)
+            c["cross_v"] = jnp.zeros(shape, dt)
+        cache["blocks"][f"layer{i}"] = c
+    return cache
+
+
+# ----------------------------------------------------------------------------
+# Forward
+# ----------------------------------------------------------------------------
+
+
+def _apply_layer(
+    cfg: ModelConfig,
+    spec: LayerSpec,
+    p: Params,
+    h: jax.Array,
+    *,
+    positions: jax.Array | None,
+    cache: Params | None,
+    cur_len: jax.Array | None,
+    enc_out: jax.Array | None,
+    prefix_len: int,
+    causal: bool,
+    q_offset: int = 0,
+) -> tuple[jax.Array, Params, jax.Array]:
+    """One layer. Returns (h, new_cache, aux_loss)."""
+    aux = jnp.float32(0.0)
+    new_cache: Params = dict(cache) if cache is not None else None
+
+    if spec.mixer in ("attn", "attn_local"):
+        window = cfg.sliding_window if spec.mixer == "attn_local" else (
+            cfg.sliding_window if all(s.mixer != "attn_local" for s in cfg.layer_unit) else 0)
+        resid = h
+        x = layers.rmsnorm(p["mixer_norm"], h)
+        kv_cache = None
+        if cache is not None and "k" in cache:
+            kv_cache = {"k": cache["k"], "v": cache["v"]}
+        out, upd = attn_lib.attention_apply(
+            p["mixer"], x,
+            n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads, head_dim=cfg.head_dim,
+            positions=positions if cfg.use_rope else None,
+            rope_theta=cfg.rope_theta, causal=causal, window=window,
+            prefix_len=prefix_len, softcap_val=cfg.attn_softcap,
+            scale=cfg.query_scale, chunk=cfg.attn_chunk, qk_norm=cfg.qk_norm,
+            cache=kv_cache, cur_len=cur_len, q_offset=q_offset)
+        if cfg.sandwich_norm:
+            out = layers.rmsnorm(p["post_mixer_norm"], out)
+        h = resid + out
+        if upd is not None and new_cache is not None:
+            new_cache["k"], new_cache["v"] = upd["k"], upd["v"]
+    elif spec.mixer == "mamba":
+        resid = h
+        x = layers.rmsnorm(p["mixer_norm"], h)
+        decode = cur_len is not None
+        out, upd = mamba.mamba_apply(
+            p["mixer"], x, headdim=cfg.mamba_headdim, d_state=cfg.ssm_state,
+            expand=cfg.mamba_expand, chunk=cfg.ssd_chunk,
+            state=cache["ssm"] if (cache is not None and "ssm" in cache) else None,
+            conv_state=cache["conv"] if (cache is not None and "conv" in cache) else None,
+            decode=decode)
+        h = resid + out
+        if new_cache is not None:
+            new_cache["ssm"], new_cache["conv"] = upd["ssm"], upd["conv"]
+
+    if spec.cross_attn:
+        resid = h
+        x = layers.rmsnorm(p["cross_norm"], h)
+        b, s, _ = x.shape
+        q = (x @ p["cross"]["wq"]).reshape(b, s, cfg.n_heads, cfg.head_dim)
+        if cur_len is not None and cache is not None and "cross_k" in cache:
+            kc, vc = cache["cross_k"], cache["cross_v"]
+            out = attn_lib.decode_attention(
+                q, kc, vc, cur_len=jnp.int32(kc.shape[1] - 1))
+        else:
+            assert enc_out is not None
+            kc = (enc_out @ p["cross"]["wk"]).reshape(
+                b, enc_out.shape[1], cfg.n_kv_heads, cfg.head_dim)
+            vc = (enc_out @ p["cross"]["wv"]).reshape(
+                b, enc_out.shape[1], cfg.n_kv_heads, cfg.head_dim)
+            out = attn_lib.flash_attention_ref(
+                q, kc, vc, chunk=cfg.attn_chunk, causal=False)
+            if new_cache is not None and "cross_k" in (cache or {}):
+                new_cache["cross_k"] = kc.astype(cache["cross_k"].dtype)
+                new_cache["cross_v"] = vc.astype(cache["cross_v"].dtype)
+        out = out.reshape(b, s, cfg.n_heads * cfg.head_dim) @ p["cross"]["wo"]
+        h = resid + out
+
+    if spec.ffn == "dense":
+        resid = h
+        x = layers.rmsnorm(p["ffn_norm"], h)
+        out = layers.ffn_apply(p["ffn"], x, kind=cfg.ffn_kind)
+        if cfg.sandwich_norm:
+            out = layers.rmsnorm(p["post_ffn_norm"], out)
+        h = resid + out
+    elif spec.ffn == "moe":
+        resid = h
+        x = layers.rmsnorm(p["ffn_norm"], h)
+        out, aux = moe.moe_apply(
+            p["ffn"], x, top_k=cfg.top_k, capacity_factor=cfg.capacity_factor,
+            moe_chunk=cfg.moe_chunk, impl=cfg.moe_impl,
+            expert_shards=cfg.expert_shards)
+        h = resid + out
+
+    return h, (new_cache if new_cache is not None else {}), aux
+
+
+def _remat_wrap(cfg: ModelConfig, fn):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "full":
+        return jax.checkpoint(fn, policy=None)
+    return jax.checkpoint(
+        fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+
+
+def forward_hidden(
+    cfg: ModelConfig,
+    params: Params,
+    h: jax.Array,  # (B, S, D) embedded inputs
+    *,
+    positions: jax.Array | None,
+    caches: Params | None = None,  # stacked over repeats
+    cur_len: jax.Array | None = None,
+    enc_out: jax.Array | None = None,
+    prefix_len: int = 0,
+    causal: bool = True,
+    unit: tuple[LayerSpec, ...] | None = None,
+    blocks: Params | None = None,
+    q_offset: int = 0,
+) -> tuple[jax.Array, Params | None, jax.Array]:
+    """Run the stacked blocks. Returns (h, new caches, aux loss)."""
+    unit = unit if unit is not None else cfg.layer_unit
+    blocks = blocks if blocks is not None else params["blocks"]
+    block_caches = caches["blocks"] if caches is not None else None
+
+    def body(carry, xs):
+        h, aux = carry
+        bp, bc = xs
+        new_bc = {}
+        for i, spec in enumerate(unit):
+            lc = bc.get(f"layer{i}") if bc is not None else None
+            h, nc, a = _apply_layer(
+                cfg, spec, bp[f"layer{i}"], h,
+                positions=positions, cache=lc, cur_len=cur_len,
+                enc_out=enc_out, prefix_len=prefix_len, causal=causal,
+                q_offset=q_offset)
+            # Pin activations to batch-sharded layout at layer boundaries so
+            # the embedding table's sharding can't flip the whole stack to a
+            # replicated-batch TP layout through the scan carry.
+            h = meshutil.shard_batch(h)
+            new_bc[f"layer{i}"] = nc
+            aux = aux + a
+        return (h, aux), new_bc
+
+    body = _remat_wrap(cfg, body)
+
+    (h, aux), new_caches = jax.lax.scan(
+        body, (h, jnp.float32(0.0)), (blocks, block_caches))
+    out_caches = {"blocks": new_caches} if caches is not None else None
+    return h, out_caches, aux
+
+
+def _embed_tokens(cfg: ModelConfig, params: Params, tokens: jax.Array) -> jax.Array:
+    h = params["embed"][tokens].astype(cfg.compute_dtype)
+    if cfg.embed_scale:
+        h = h * jnp.asarray(math.sqrt(cfg.d_model), cfg.compute_dtype)
+    return h
+
+
+def _unembed(cfg: ModelConfig, params: Params) -> jax.Array:
+    return params["embed"] if cfg.tie_embeddings else params["unembed"]
+
+
+def encode(cfg: ModelConfig, params: Params, enc_inputs: jax.Array) -> jax.Array:
+    """Whisper encoder over stub frame embeddings (B, enc_seq, D)."""
+    h = enc_inputs.astype(cfg.compute_dtype)
+    s = h.shape[1]
+    h = h + layers.sinusoidal_positions(s, cfg.d_model, cfg.compute_dtype)[None]
+    h = meshutil.shard_batch(h)
+    enc_cfg = dataclasses.replace(cfg, ffn_kind="gelu_mlp", use_rope=False)
+    h, _, _ = forward_hidden(
+        enc_cfg, params, h, positions=None, causal=False,
+        unit=_ENC_UNIT, blocks=params["encoder"]["blocks"])
+    return layers.rmsnorm(params["encoder"]["final_norm"], h)
+
+
+def _prepare_inputs(
+    cfg: ModelConfig, params: Params, batch: dict[str, jax.Array]
+) -> tuple[jax.Array, jax.Array | None, jax.Array, int]:
+    """Embed tokens (+ prefix / encoder). Returns (h, enc_out, positions, prefix_len)."""
+    tokens = batch["tokens"]
+    h = _embed_tokens(cfg, params, tokens)
+    enc_out = None
+    prefix_len = 0
+    if cfg.is_encoder_decoder:
+        enc_out = encode(cfg, params, batch["enc_inputs"])
+    if cfg.prefix_len > 0 and "prefix_embeds" in batch:
+        pre = batch["prefix_embeds"].astype(cfg.compute_dtype)
+        if cfg.embed_scale:
+            pre = pre * jnp.asarray(math.sqrt(cfg.d_model), cfg.compute_dtype)
+        h = jnp.concatenate([pre, h], axis=1)
+        prefix_len = pre.shape[1]
+    s = h.shape[1]
+    if cfg.sinusoidal_pos:
+        h = h + layers.sinusoidal_positions(s, cfg.d_model, cfg.compute_dtype)[None]
+    h = meshutil.shard_batch(h)
+    positions = jnp.arange(s)
+    return h, enc_out, positions, prefix_len
+
+
+def train_loss(
+    cfg: ModelConfig, params: Params, batch: dict[str, jax.Array]
+) -> tuple[jax.Array, dict[str, jax.Array]]:
+    """Next-token CE (+ MoE aux). batch: tokens (B,S) [+ enc_inputs / prefix_embeds / loss_mask]."""
+    tokens = batch["tokens"]
+    b, s_tok = tokens.shape
+    h, enc_out, positions, prefix_len = _prepare_inputs(cfg, params, batch)
+    h, _, aux = forward_hidden(
+        cfg, params, h, positions=positions, enc_out=enc_out,
+        prefix_len=prefix_len, causal=True)
+    h = layers.rmsnorm(params["final_norm"], h)
+    if prefix_len > 0:
+        h = h[:, prefix_len:]  # loss only over text tokens
+
+    targets = jnp.concatenate(
+        [tokens[:, 1:], jnp.zeros((b, 1), tokens.dtype)], axis=1)
+    mask = batch.get("loss_mask", jnp.ones((b, s_tok), jnp.float32))
+    mask = mask.at[:, -1].set(0.0)
+
+    loss = layers.chunked_cross_entropy(
+        h, _unembed(cfg, params), targets, mask,
+        chunk=cfg.loss_chunk, final_softcap=cfg.final_softcap)
+    total = loss + cfg.router_aux_coef * aux
+    return total, {"ce": loss, "aux": aux}
+
+
+def prefill(
+    cfg: ModelConfig, params: Params, batch: dict[str, jax.Array], *, max_seq: int
+) -> tuple[jax.Array, Params]:
+    """Process the prompt, fill caches, return last-position logits."""
+    tokens = batch["tokens"]
+    b = tokens.shape[0]
+    h, enc_out, positions, prefix_len = _prepare_inputs(cfg, params, batch)
+    caches = init_cache(cfg, b, max_seq, enc_seq=enc_out.shape[1] if enc_out is not None else None)
+    h, caches, _ = forward_hidden(
+        cfg, params, h, positions=positions, caches=caches,
+        enc_out=enc_out, prefix_len=prefix_len, causal=True)
+    h = layers.rmsnorm(params["final_norm"], h)
+    logits = h[:, -1:].astype(jnp.float32) @ _unembed(cfg, params).astype(jnp.float32).T
+    logits = layers.softcap(logits, cfg.final_softcap)
+    return logits, caches
+
+
+def decode_step(
+    cfg: ModelConfig, params: Params, tokens: jax.Array, caches: Params,
+    cur_len: jax.Array,
+) -> tuple[jax.Array, Params]:
+    """One decode step: tokens (B,1) at absolute position cur_len."""
+    h = meshutil.shard_batch(_embed_tokens(cfg, params, tokens))
+    positions = cur_len[None] if jnp.ndim(cur_len) == 0 else cur_len
+    h, caches, _ = forward_hidden(
+        cfg, params, h, positions=positions, caches=caches, cur_len=cur_len)
+    h = layers.rmsnorm(params["final_norm"], h)
+    logits = h.astype(jnp.float32) @ _unembed(cfg, params).astype(jnp.float32).T
+    logits = layers.softcap(logits, cfg.final_softcap)
+    return logits, caches

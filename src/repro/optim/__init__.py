@@ -1,0 +1,4 @@
+from repro.optim import adamw, schedule
+from repro.optim.adamw import AdamWConfig, apply_updates, init_state
+
+__all__ = ["adamw", "schedule", "AdamWConfig", "apply_updates", "init_state"]

@@ -1,0 +1,94 @@
+"""AdamW with decoupled weight decay, global-norm clipping, bf16-safe.
+
+Moments are kept in fp32 regardless of param dtype (production mixed
+precision: bf16 params + fp32 optimizer state).  Pure-pytree states so the
+whole optimizer shards with the same rules as the params.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    schedule: Callable[[jax.Array], jax.Array] | None = None  # step -> lr scale
+    # fp32 moments by default; bf16 for models whose optimizer state would
+    # not fit HBM otherwise (jamba-398B on a single v5e pod) -- documented
+    # precision trade-off, update math still runs in fp32.
+    moment_dtype: Any = jnp.float32
+
+
+def init_state(params: Params, moment_dtype=jnp.float32) -> dict[str, Any]:
+    zeros = lambda p: jnp.zeros(p.shape, moment_dtype)
+    return {
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+        "count": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(tree: Params) -> jax.Array:
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree))
+    )
+
+
+def apply_updates(
+    cfg: AdamWConfig,
+    params: Params,
+    grads: Params,
+    state: dict[str, Any],
+) -> tuple[Params, dict[str, Any], dict[str, jax.Array]]:
+    """One AdamW step.  Returns (new params, new state, metrics)."""
+    count = state["count"] + 1
+    gnorm = global_norm(grads)
+    scale = jnp.where(
+        gnorm > cfg.grad_clip, cfg.grad_clip / jnp.maximum(gnorm, 1e-9), 1.0
+    ).astype(jnp.float32)
+
+    lr = jnp.asarray(cfg.lr, jnp.float32)
+    if cfg.schedule is not None:
+        lr = lr * cfg.schedule(count)
+
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1.0 - b1 ** count.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** count.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        mdt = m.dtype
+        g = g.astype(jnp.float32) * scale
+        m = b1 * m.astype(jnp.float32) + (1.0 - b1) * g
+        v = b2 * v.astype(jnp.float32) + (1.0 - b2) * jnp.square(g)
+        mhat = m / bc1
+        vhat = v / bc2
+        step = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        # decoupled weight decay on matrices only (ndim >= 2)
+        if p.ndim >= 2 and cfg.weight_decay > 0.0:
+            step = step + cfg.weight_decay * p.astype(jnp.float32)
+        new_p = (p.astype(jnp.float32) - lr * step).astype(p.dtype)
+        return new_p, m.astype(mdt), v.astype(mdt)
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state["m"])
+    flat_v = treedef.flatten_up_to(state["v"])
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_params = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+
+    new_state = {"m": new_m, "v": new_v, "count": count}
+    return new_params, new_state, {"grad_norm": gnorm, "lr": lr}

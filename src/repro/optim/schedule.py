@@ -1,0 +1,26 @@
+"""LR schedules (as pure fns of the step counter, jit-safe)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def warmup_cosine(warmup: int, total: int, *, floor: float = 0.1):
+    """Linear warmup then cosine decay to ``floor`` of the peak LR."""
+
+    def fn(step):
+        step = step.astype(jnp.float32)
+        warm = step / jnp.maximum(1.0, float(warmup))
+        prog = (step - warmup) / jnp.maximum(1.0, float(total - warmup))
+        prog = jnp.clip(prog, 0.0, 1.0)
+        cos = floor + (1.0 - floor) * 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+        return jnp.where(step < warmup, warm, cos)
+
+    return fn
+
+
+def constant():
+    def fn(step):
+        return jnp.ones_like(step, jnp.float32)
+
+    return fn

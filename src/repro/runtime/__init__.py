@@ -1,0 +1,3 @@
+from repro.runtime import fault_tolerance, serving, trainer
+
+__all__ = ["fault_tolerance", "serving", "trainer"]

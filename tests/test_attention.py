@@ -1,0 +1,122 @@
+"""Flash attention reference: fwd + custom-VJP bwd vs the naive oracle."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.models import attention as A
+
+
+def _qkv(key, b, sq, sk, h, hkv, hd, dtype=jnp.float32):
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (b, sq, h, hd), dtype)
+    k = jax.random.normal(ks[1], (b, sk, hkv, hd), dtype)
+    v = jax.random.normal(ks[2], (b, sk, hkv, hd), dtype)
+    return q, k, v
+
+
+CASES = [
+    dict(causal=True),
+    dict(causal=False),
+    dict(causal=True, window=24),
+    dict(causal=True, softcap_val=20.0),
+    dict(causal=True, prefix_len=10),
+    dict(causal=True, window=16, softcap_val=30.0),
+]
+
+
+class TestFlashForward:
+    @pytest.mark.parametrize("kw", CASES)
+    def test_vs_naive(self, kw, rng):
+        q, k, v = _qkv(rng, 2, 64, 64, 6, 2, 16)
+        out = A.flash_attention_ref(q, k, v, chunk=16, **kw)
+        want = A.naive_attention(q, k, v, **kw)
+        np.testing.assert_allclose(out, want, atol=2e-5)
+
+    @given(
+        sq=st.sampled_from([16, 48, 64]),
+        sk=st.sampled_from([16, 32, 64]),
+        chunk=st.sampled_from([8, 16, 64]),
+        hkv=st.sampled_from([1, 2, 4]),
+        g=st.sampled_from([1, 3]),
+        dtype=st.sampled_from([jnp.float32, jnp.bfloat16]),
+    )
+    @settings(max_examples=25, deadline=None)
+    def test_shape_dtype_sweep(self, sq, sk, chunk, hkv, g, dtype):
+        q, k, v = _qkv(jax.random.PRNGKey(sq * sk), 2, sq, sk, hkv * g, hkv, 8,
+                       dtype)
+        out = A.flash_attention_ref(q, k, v, chunk=chunk, causal=sq == sk)
+        want = A.naive_attention(q, k, v, causal=sq == sk)
+        assert out.dtype == dtype
+        tol = 2e-5 if dtype == jnp.float32 else 2e-2
+        np.testing.assert_allclose(
+            np.asarray(out, np.float32), np.asarray(want, np.float32), atol=tol)
+
+    def test_q_offset_continuation(self):
+        """Chunked prefill: flash(q2 at offset) == tail of full flash."""
+        q, k, v = _qkv(jax.random.PRNGKey(7), 2, 64, 64, 4, 2, 16)
+        full = A.flash_attention_ref(q, k, v, chunk=16, causal=True)
+        part = A.flash_attention_ref(
+            q[:, 32:], k, v, chunk=16, causal=True, q_offset=32)
+        np.testing.assert_allclose(part, full[:, 32:], atol=2e-5)
+
+
+class TestFlashBackward:
+    @pytest.mark.parametrize("kw", CASES)
+    def test_grads_vs_naive(self, kw, rng):
+        q, k, v = _qkv(rng, 2, 48, 48, 4, 2, 16)
+
+        def loss_flash(q, k, v):
+            return (A.flash_attention_ref(q, k, v, chunk=16, **kw) ** 2).sum()
+
+        def loss_naive(q, k, v):
+            return (A.naive_attention(q, k, v, **kw) ** 2).sum()
+
+        g1 = jax.grad(loss_flash, argnums=(0, 1, 2))(q, k, v)
+        g2 = jax.grad(loss_naive, argnums=(0, 1, 2))(q, k, v)
+        for a, b in zip(g1, g2):
+            np.testing.assert_allclose(a, b, atol=5e-5)
+
+    def test_no_stacked_p_matrices(self):
+        """The custom VJP must not save an (n_pairs, ..., cq, ck) stack."""
+        q, k, v = _qkv(jax.random.PRNGKey(3), 1, 64, 64, 2, 2, 8)
+
+        def loss(q):
+            return (A.flash_attention_ref(q, k, v, chunk=16, causal=True) ** 2).sum()
+
+        jaxpr = jax.make_jaxpr(jax.grad(loss))(q)
+        # count residual buffers whose size rivals the full P stack
+        n_pairs = 10  # causal 4x4 lower triangle
+        p_stack_elems = n_pairs * 2 * 64 * 16  # pairs*h*q*k per batch entry
+        big = [
+            v_ for eqn in jaxpr.eqns for v_ in eqn.outvars
+            if hasattr(v_, "aval") and getattr(v_.aval, "size", 0) >= p_stack_elems
+        ]
+        assert not big, [v_.aval.shape for v_ in big]
+
+
+class TestDecode:
+    def test_decode_matches_naive_last_token(self, rng):
+        q, k, v = _qkv(rng, 2, 40, 40, 4, 2, 16)
+        kc = jnp.zeros((2, 64, 2, 16)).at[:, :40].set(k)
+        vc = jnp.zeros((2, 64, 2, 16)).at[:, :40].set(v)
+        out = A.decode_attention(q[:, 39:40], kc, vc, cur_len=jnp.int32(39))
+        want = A.naive_attention(q, k, v, causal=True)[:, 39:40]
+        np.testing.assert_allclose(out, want, atol=2e-5)
+
+    def test_ring_buffer_swa(self, rng):
+        w = 16
+        q, k, v = _qkv(rng, 2, 40, 40, 4, 2, 16)
+        kr = jnp.zeros((2, w, 2, 16))
+        vr = jnp.zeros((2, w, 2, 16))
+        cur = 39
+        for pos in range(cur - w + 1, cur + 1):
+            kr = kr.at[:, pos % w].set(k[:, pos])
+            vr = vr.at[:, pos % w].set(v[:, pos])
+        out = A.decode_attention(
+            q[:, cur:cur + 1], kr, vr, cur_len=jnp.int32(cur), window=w)
+        want = A.naive_attention(q, k, v, causal=True, window=w)[:, cur:cur + 1]
+        np.testing.assert_allclose(out, want, atol=2e-5)

@@ -1,0 +1,79 @@
+"""Task-dependency categorization: Table-2 reproduction + classifier rules."""
+
+from repro.core import dependency as dep
+
+
+class TestClassifier:
+    def test_independent(self):
+        w = dep.Workload("w", [
+            dep.Task.make("a", reads=["x0"], writes=["y0"]),
+            dep.Task.make("b", reads=["x1"], writes=["y1"]),
+        ])
+        assert dep.classify(w) is dep.Category.INDEPENDENT
+
+    def test_false_dependent_rar(self):
+        w = dep.Workload("w", [
+            dep.Task.make("a", reads=["x0", "x1"], writes=["y0"]),
+            dep.Task.make("b", reads=["x1", "x2"], writes=["y1"]),
+            dep.Task.make("c", reads=["x2", "x3"], writes=["y2"]),
+        ])
+        assert dep.classify(w) is dep.Category.FALSE_DEPENDENT
+
+    def test_true_dependent_raw(self):
+        w = dep.Workload("w", [
+            dep.Task.make("a", reads=["x0"], writes=["y0"]),
+            dep.Task.make("b", reads=["y0"], writes=["y1"]),
+        ])
+        assert dep.classify(w) is dep.Category.TRUE_DEPENDENT
+
+    def test_sync_shared_input(self):
+        w = dep.Workload("w", [
+            dep.Task.make("a", reads=["shared", "x0"], writes=["y0"]),
+            dep.Task.make("b", reads=["shared", "x1"], writes=["y1"]),
+        ])
+        assert dep.classify(w) is dep.Category.SYNC
+
+    def test_iterative(self):
+        w = dep.Workload("w", [
+            dep.Task.make("a", reads=["x0"], writes=["y0"]),
+            dep.Task.make("b", reads=["x1"], writes=["y1"]),
+        ], kernel_iterations=100)
+        assert dep.classify(w) is dep.Category.ITERATIVE
+
+    def test_sequential_kernel_is_sync(self):
+        w = dep.Workload(
+            "myocyte", [dep.Task.make("t", reads=["x"], writes=["y"])],
+            sequential_kernel=True)
+        assert dep.classify(w) is dep.Category.SYNC
+
+    def test_raw_beats_rar(self):
+        """A workload with both RAW and RAR is True-dependent (the stricter)."""
+        w = dep.Workload("w", [
+            dep.Task.make("a", reads=["x0", "x1"], writes=["y0"]),
+            dep.Task.make("b", reads=["x1", "y0"], writes=["y1"]),
+        ])
+        assert dep.classify(w) is dep.Category.TRUE_DEPENDENT
+
+    def test_streamable_property(self):
+        assert dep.Category.INDEPENDENT.streamable
+        assert dep.Category.FALSE_DEPENDENT.streamable
+        assert dep.Category.TRUE_DEPENDENT.streamable
+        assert not dep.Category.SYNC.streamable
+        assert not dep.Category.ITERATIVE.streamable
+
+
+class TestPaperTable2:
+    def test_full_suite_matches_paper(self):
+        """Every modeled benchmark classifies into its paper category."""
+        results = dep.classify_paper_suite()
+        mismatches = {k: v for k, v in results.items() if not v[2]}
+        assert not mismatches, mismatches
+
+    def test_counts(self):
+        """Paper: 3 streamable categories + SYNC + Iterative all populated."""
+        results = dep.classify_paper_suite()
+        by_cat = {}
+        for got, _, _ in results.values():
+            by_cat[got] = by_cat.get(got, 0) + 1
+        for cat in dep.Category:
+            assert by_cat.get(cat, 0) >= 3, f"{cat} underpopulated: {by_cat}"

@@ -1,0 +1,156 @@
+"""Pallas kernels (interpret mode) vs pure-jnp oracles, with shape/dtype sweeps."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.kernels import ops, ref
+from repro.models import attention as A
+
+
+class TestStreamedMatmul:
+    @given(
+        m=st.sampled_from([32, 64, 128]),
+        k=st.sampled_from([32, 64, 128]),
+        n=st.sampled_from([32, 64, 96]),
+        bm=st.sampled_from([16, 32]),
+        dtype=st.sampled_from([jnp.float32, jnp.bfloat16]),
+    )
+    @settings(max_examples=20, deadline=None)
+    def test_sweep_vs_ref(self, m, k, n, bm, dtype):
+        x = jax.random.normal(jax.random.PRNGKey(m + n), (m, k), dtype)
+        y = jax.random.normal(jax.random.PRNGKey(k), (k, n), dtype)
+        out = ops.matmul(x, y, block_m=bm, block_n=16, block_k=16)
+        want = ref.matmul_ref(x, y)
+        tol = 1e-4 if dtype == jnp.float32 else 5e-2
+        np.testing.assert_allclose(
+            np.asarray(out, np.float32), np.asarray(want, np.float32),
+            rtol=tol, atol=tol * 8)
+
+    def test_block_shape_invariance(self):
+        x = jax.random.normal(jax.random.PRNGKey(0), (128, 128))
+        y = jax.random.normal(jax.random.PRNGKey(1), (128, 128))
+        outs = [
+            np.asarray(ops.matmul(x, y, block_m=bm, block_n=bn, block_k=bk))
+            for bm, bn, bk in [(32, 32, 32), (64, 64, 64), (128, 128, 128)]
+        ]
+        for o in outs[1:]:
+            # rtol alone is meaningless for near-zero entries of a random
+            # matmul; bound the absolute f32 accumulation-order difference
+            np.testing.assert_allclose(o, outs[0], rtol=1e-5, atol=1e-4)
+
+
+class TestFlashKernel:
+    @pytest.mark.parametrize("kw", [
+        dict(causal=True), dict(causal=False), dict(causal=True, window=48),
+        dict(causal=True, softcap=20.0),
+    ])
+    def test_vs_oracle(self, kw):
+        b, s, h, hkv, hd = 2, 128, 4, 2, 32
+        q = jax.random.normal(jax.random.PRNGKey(0), (b, s, h, hd))
+        k = jax.random.normal(jax.random.PRNGKey(1), (b, s, hkv, hd))
+        v = jax.random.normal(jax.random.PRNGKey(2), (b, s, hkv, hd))
+        out = ops.flash_attention(q, k, v, block_q=32, block_k=32, **kw)
+        kw2 = {("softcap_val" if k_ == "softcap" else k_): v_ for k_, v_ in kw.items()}
+        want = A.naive_attention(q, k, v, **kw2)
+        np.testing.assert_allclose(out, want, atol=2e-5)
+
+    @given(
+        s=st.sampled_from([64, 128]),
+        bq=st.sampled_from([16, 32, 64]),
+        hd=st.sampled_from([16, 32]),
+        dtype=st.sampled_from([jnp.float32, jnp.bfloat16]),
+    )
+    @settings(max_examples=15, deadline=None)
+    def test_sweep(self, s, bq, hd, dtype):
+        q = jax.random.normal(jax.random.PRNGKey(s), (1, s, 2, hd), dtype)
+        k = jax.random.normal(jax.random.PRNGKey(s + 1), (1, s, 2, hd), dtype)
+        v = jax.random.normal(jax.random.PRNGKey(s + 2), (1, s, 2, hd), dtype)
+        out = ops.flash_attention(q, k, v, block_q=bq, block_k=bq, causal=True)
+        want = A.naive_attention(q, k, v, causal=True)
+        tol = 3e-5 if dtype == jnp.float32 else 3e-2
+        np.testing.assert_allclose(
+            np.asarray(out, np.float32), np.asarray(want, np.float32), atol=tol)
+
+
+class TestFWT:
+    @given(logn=st.integers(4, 13), block=st.sampled_from([16, 64, 256]))
+    @settings(max_examples=20, deadline=None)
+    def test_flat_sweep(self, logn, block):
+        n = 2 ** logn
+        x = jax.random.normal(jax.random.PRNGKey(n), (n,))
+        out = ops.fwt(x, block=min(block, n))
+        want = ref.fwt_ref(x)
+        scale = float(jnp.abs(want).max())
+        np.testing.assert_allclose(
+            np.asarray(out) / scale, np.asarray(want) / scale, atol=1e-5)
+
+    def test_involution(self):
+        """WHT(WHT(x)) == n * x — transform property check."""
+        n = 1024
+        x = jax.random.normal(jax.random.PRNGKey(5), (n,))
+        twice = ops.fwt(ops.fwt(x, block=64), block=64)
+        np.testing.assert_allclose(np.asarray(twice) / n, np.asarray(x),
+                                   atol=1e-4)
+
+    def test_batched_rows(self):
+        x = jax.random.normal(jax.random.PRNGKey(9), (8, 128))
+        out = ops.fwt(x)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref.fwt_ref(x)),
+                                   atol=1e-4)
+
+
+class TestNW:
+    @given(b=st.sampled_from([8, 16, 32]), gap=st.sampled_from([0.5, 1.0, 2.0]))
+    @settings(max_examples=15, deadline=None)
+    def test_tile_sweep(self, b, gap):
+        rng = np.random.default_rng(b)
+        north = rng.normal(size=b).astype(np.float32)
+        west = rng.normal(size=b).astype(np.float32)
+        corner = float(rng.normal())
+        sub = rng.normal(size=(b, b)).astype(np.float32)
+        out = ops.nw_tile(jnp.asarray(north), jnp.asarray(west),
+                          jnp.asarray(corner), jnp.asarray(sub), gap=gap)
+        want = ref.nw_ref(north, west, corner, sub, gap=gap)
+        np.testing.assert_allclose(np.asarray(out), want, atol=1e-4)
+
+    def test_full_wavefront(self):
+        rng = np.random.default_rng(0)
+        scores = rng.normal(size=(64, 48)).astype(np.float32)
+        out = ops.nw_wavefront(jnp.asarray(scores), block=16)
+        want = ref.nw_full_ref(scores)
+        np.testing.assert_allclose(np.asarray(out), want, atol=1e-4)
+
+
+class TestSSDChunkKernel:
+    @given(
+        s=st.sampled_from([32, 64]),
+        chunk=st.sampled_from([8, 16, 32]),
+        h=st.sampled_from([1, 3]),
+        p=st.sampled_from([4, 8]),
+    )
+    @settings(max_examples=12, deadline=None)
+    def test_vs_recurrence(self, s, chunk, h, p):
+        from repro.models import mamba
+        ks = jax.random.split(jax.random.PRNGKey(s + chunk), 4)
+        x = 0.3 * jax.random.normal(ks[0], (2, s, h, p))
+        dt = jax.nn.softplus(jax.random.normal(ks[1], (2, s, h)))
+        a = -jnp.exp(jnp.linspace(-1.0, 1.0, h))
+        b_ = 0.3 * jax.random.normal(ks[2], (2, s, 16))
+        c_ = 0.3 * jax.random.normal(ks[3], (2, s, 16))
+        y_k = ops.ssd(x, dt, a, b_, c_, chunk=chunk)
+        y_r, _ = mamba.ssd_ref(x, dt, a, b_, c_)
+        np.testing.assert_allclose(np.asarray(y_k), np.asarray(y_r), atol=1e-4)
+
+    def test_state_stays_in_vmem(self):
+        """The kernel's inter-chunk state is VMEM scratch: the jaxpr must not
+        thread an (N, P) state through HBM-visible outputs."""
+        from repro.kernels import ssd_chunk
+        xdt = jnp.ones((2, 32, 8))
+        adt = -0.1 * jnp.ones((2, 32))
+        b_ = jnp.ones((2, 32, 16))
+        out = ssd_chunk.ssd_chunk_kernel(xdt, adt, b_, b_, chunk=8, interpret=True)
+        assert out.shape == (2, 32, 8)  # only y comes back

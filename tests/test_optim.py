@@ -1,0 +1,59 @@
+"""AdamW: convergence, clipping, schedules, bf16 moments."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.optim import adamw, schedule
+
+
+class TestAdamW:
+    def test_converges_on_quadratic(self):
+        cfg = adamw.AdamWConfig(lr=0.1, weight_decay=0.0, grad_clip=100.0)
+        params = {"w": jnp.asarray([5.0, -3.0])}
+        state = adamw.init_state(params)
+        target = jnp.asarray([1.0, 2.0])
+        for _ in range(300):
+            grads = jax.grad(lambda p: ((p["w"] - target) ** 2).sum())(params)
+            params, state, _ = adamw.apply_updates(cfg, params, grads, state)
+        np.testing.assert_allclose(np.asarray(params["w"]), np.asarray(target),
+                                   atol=1e-2)
+
+    def test_grad_clip(self):
+        cfg = adamw.AdamWConfig(lr=1.0, grad_clip=1.0, weight_decay=0.0)
+        params = {"w": jnp.zeros((4, 4))}
+        state = adamw.init_state(params)
+        grads = {"w": jnp.full((4, 4), 100.0)}
+        _, _, metrics = adamw.apply_updates(cfg, params, grads, state)
+        assert float(metrics["grad_norm"]) == pytest.approx(400.0)
+
+    def test_weight_decay_only_on_matrices(self):
+        cfg = adamw.AdamWConfig(lr=0.1, weight_decay=1.0)
+        params = {"w": jnp.ones((2, 2)), "b": jnp.ones((2,))}
+        state = adamw.init_state(params)
+        grads = jax.tree.map(jnp.zeros_like, params)
+        new_params, _, _ = adamw.apply_updates(cfg, params, grads, state)
+        assert float(new_params["w"][0, 0]) < 1.0  # decayed
+        np.testing.assert_allclose(np.asarray(new_params["b"]), 1.0)  # not
+
+    def test_bf16_moments(self):
+        cfg = adamw.AdamWConfig(lr=0.1, moment_dtype=jnp.bfloat16,
+                                weight_decay=0.0)
+        params = {"w": jnp.asarray([4.0])}
+        state = adamw.init_state(params, jnp.bfloat16)
+        assert state["m"]["w"].dtype == jnp.bfloat16
+        for _ in range(200):
+            grads = jax.grad(lambda p: (p["w"] ** 2).sum())(params)
+            params, state, _ = adamw.apply_updates(cfg, params, grads, state)
+        assert abs(float(params["w"][0])) < 0.2
+        assert state["m"]["w"].dtype == jnp.bfloat16
+
+
+class TestSchedules:
+    def test_warmup_cosine(self):
+        fn = schedule.warmup_cosine(10, 100, floor=0.1)
+        assert float(fn(jnp.int32(0))) == pytest.approx(0.0)
+        assert float(fn(jnp.int32(10))) == pytest.approx(1.0, abs=0.01)
+        assert float(fn(jnp.int32(100))) == pytest.approx(0.1, abs=0.01)
+        assert float(fn(jnp.int32(55))) < 1.0

@@ -1,0 +1,139 @@
+"""Stream engine: device-level stream_map/stream_scan, halo partitioning,
+host-level executor, and the paper's generic decision flow."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import dependency as dep
+from repro.core import halo, rmetric, streams
+
+
+class TestStreamMap:
+    def test_independent_equals_unstreamed(self):
+        xs = jnp.arange(64, dtype=jnp.float32)
+        fn = lambda c: jnp.sqrt(jnp.abs(c)) * 2.0
+        for n in (1, 2, 4, 8):
+            out = streams.stream_map(fn, xs, num_streams=n)
+            np.testing.assert_allclose(out, fn(xs), rtol=1e-6)
+
+    def test_pytree_inputs(self):
+        xs = {"a": jnp.arange(16.0), "b": jnp.ones((16, 3))}
+        fn = lambda t: {"y": t["a"][:, None] + t["b"]}
+        out = streams.stream_map(fn, xs, num_streams=4)
+        np.testing.assert_allclose(out["y"], xs["a"][:, None] + xs["b"])
+
+    def test_indivisible_raises(self):
+        with pytest.raises(ValueError):
+            streams.stream_map(lambda c: c, jnp.arange(10.0), num_streams=4)
+
+    def test_nonstreamable_category_rejected(self):
+        with pytest.raises(ValueError):
+            streams.stream_map(
+                lambda c: c, jnp.arange(8.0), num_streams=2,
+                category=dep.Category.SYNC)
+
+    @given(n_streams=st.sampled_from([1, 2, 4, 8]), halo_w=st.integers(1, 3))
+    @settings(max_examples=20, deadline=None)
+    def test_false_dependent_halo_stencil(self, n_streams, halo_w):
+        """A stencil computed with redundant halo transfer matches the
+        unpartitioned stencil away from the (clamped) global edges."""
+        xs = jnp.asarray(np.random.default_rng(0).normal(size=64).astype(np.float32))
+
+        def stencil_chunk(chunk):  # chunk: (core + 2*halo,)
+            out = chunk
+            for _ in range(halo_w):
+                out = 0.5 * (jnp.roll(out, 1) + jnp.roll(out, -1))
+            return out[halo_w:-halo_w]
+
+        got = streams.stream_map(
+            stencil_chunk, xs, num_streams=n_streams,
+            category=dep.Category.FALSE_DEPENDENT, halo=halo_w)
+        full = xs
+        for _ in range(halo_w):
+            full = 0.5 * (jnp.roll(full, 1) + jnp.roll(full, -1))
+        inner = slice(halo_w, -halo_w)
+        np.testing.assert_allclose(got[inner], full[inner], rtol=1e-5)
+
+    def test_stream_scan_prefix_sum(self):
+        xs = jnp.arange(32, dtype=jnp.float32)
+
+        def chunk_fn(carry, chunk):
+            s = carry + jnp.cumsum(chunk)
+            return s[-1], s
+
+        carry, out = streams.stream_scan(chunk_fn, jnp.float32(0), xs, num_streams=8)
+        np.testing.assert_allclose(out, jnp.cumsum(xs), rtol=1e-6)
+        assert carry == pytest.approx(float(xs.sum()))
+
+
+class TestHalo:
+    @given(
+        n=st.sampled_from([16, 32, 64]),
+        chunks=st.sampled_from([2, 4, 8]),
+        h=st.integers(0, 4),
+    )
+    @settings(max_examples=40, deadline=None)
+    def test_partition_shapes_and_core(self, n, chunks, h):
+        xs = jnp.arange(n)
+        parts = halo.halo_partition(xs, chunks, h)
+        assert parts.shape == (chunks, n // chunks + 2 * h)
+        core = halo.strip_halo(parts, h) if h else parts
+        np.testing.assert_array_equal(core.reshape(-1), xs)
+
+    def test_profitability_rule_paper_cases(self):
+        # FWT: halo 254 vs task 1048576 -> profitable (paper: +39%)
+        assert halo.halo_streaming_profitable(254, 1048576)
+        # lavaMD: halo 222 vs task 250 -> NOT profitable (paper: regression)
+        assert not halo.halo_streaming_profitable(222, 250)
+
+
+class TestHostExecutor:
+    def test_single_and_multi_stream_agree(self):
+        fn = jax.jit(lambda x: (x * 2.0).sum())
+        ex = streams.HostStreamExecutor(fn, num_streams=3)
+        tasks = [np.full((128,), i, np.float32) for i in range(6)]
+        out1, stats1 = ex.single_stream_run(tasks)
+        out2, stats2 = ex.multi_stream_run(tasks)
+        np.testing.assert_allclose(np.asarray(out1), np.asarray(out2))
+        assert stats1.h2d > 0 and stats1.kex > 0  # stage-by-stage measured
+
+    def test_measure_r(self):
+        fn = jax.jit(lambda x: jnp.tanh(x @ x.T).sum())
+        ex = streams.HostStreamExecutor(fn, num_streams=2)
+        tasks = [np.ones((64, 64), np.float32)] * 4
+        r, stats = ex.measure_r(tasks)
+        assert 0.0 <= r <= 1.0
+
+
+class TestGenericFlow:
+    def test_plan_streaming_not_worthwhile(self):
+        w = dep.PAPER_TABLE2["nn"][0]
+        t = rmetric.StageTimes(h2d=0.02, kex=0.98)
+        plan = streams.plan_streaming(w, t)
+        assert plan.decision == "not-worthwhile"
+        assert plan.num_streams == 1
+
+    def test_plan_streaming_streams_nn(self):
+        w = dep.PAPER_TABLE2["nn"][0]
+        t = rmetric.StageTimes(h2d=0.45, kex=0.55)
+        plan = streams.plan_streaming(w, t)
+        assert plan.decision == "stream"
+        assert plan.category is dep.Category.INDEPENDENT
+        assert plan.num_streams > 1
+
+    def test_plan_streaming_lavamd_halo_block(self):
+        w = dep.PAPER_TABLE2["lavaMD"][0]
+        t = rmetric.StageTimes(h2d=0.3476, kex=0.3380)
+        plan = streams.plan_streaming(w, t, halo_elements=222, task_elements=250)
+        assert plan.decision == "not-worthwhile"
+        assert "halo" in plan.notes
+
+    def test_plan_streaming_nonstreamable(self):
+        w = dep.PAPER_TABLE2["hotspot"][0]  # Iterative
+        t = rmetric.StageTimes(h2d=0.4, kex=0.6)
+        plan = streams.plan_streaming(w, t)
+        assert plan.decision == "non-streamable"
