@@ -5,6 +5,7 @@
   bench_overlap    -> Fig. 9 (single vs multi stream) + lavaMD negative case
   bench_categorize -> Table 2 (dependency categorization)
   bench_roofline   -> §Roofline table from the dry-run artifacts (e)/(g)
+  bench_serving    -> continuous-batching tokens/s vs sequential baseline
 
 Run: PYTHONPATH=src python -m benchmarks.run [--only NAME]
 """
@@ -19,16 +20,19 @@ import time
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
-                    help="run a single bench: rmetric|overlap|categorize|roofline")
+                    help="run a single bench: "
+                         "rmetric|overlap|categorize|roofline|serving")
     args = ap.parse_args()
 
-    from benchmarks import bench_categorize, bench_overlap, bench_rmetric, bench_roofline
+    from benchmarks import (bench_categorize, bench_overlap, bench_rmetric,
+                            bench_roofline, bench_serving)
 
     benches = {
         "categorize": bench_categorize.run,
         "overlap": bench_overlap.run,
         "rmetric": bench_rmetric.run,
         "roofline": bench_roofline.run,
+        "serving": bench_serving.run,
     }
     if args.only:
         benches = {args.only: benches[args.only]}

@@ -22,12 +22,26 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+# jax.shard_map landed in 0.6; older releases only have the experimental path.
+_shard_map = getattr(jax, "shard_map", None)
+if _shard_map is None:
+    from jax.experimental.shard_map import shard_map as _shard_map
+
 
 def _pvary(x: jax.Array, axis_name: str) -> jax.Array:
     """Mark ``x`` as varying over ``axis_name`` (shard_map VMA bookkeeping)."""
     if hasattr(jax.lax, "pvary"):
         return jax.lax.pvary(x, (axis_name,))
-    return jax.lax.pcast(x, (axis_name,), to="varying")  # newer spelling
+    if hasattr(jax.lax, "pcast"):
+        return jax.lax.pcast(x, (axis_name,), to="varying")  # older spelling
+    return x  # pre-VMA JAX: no bookkeeping needed
+
+
+def _axis_size(axis_name: str) -> int:
+    """Static mesh-axis size; ``lax.axis_size`` only exists on newer JAX."""
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(axis_name)
+    return jax.lax.psum(1, axis_name)  # constant-folds to the static size
 
 
 # ----------------------------------------------------------------------------
@@ -70,7 +84,7 @@ def ag_matmul_ring(x: jax.Array, w: jax.Array, axis_name: str) -> jax.Array:
     (``ppermute``).  Same math as ``ag_matmul_reference``; the collective is
     decomposed into P-1 overlappable hops.
     """
-    p = jax.lax.axis_size(axis_name)
+    p = _axis_size(axis_name)
     idx = jax.lax.axis_index(axis_name)
     m_local = x.shape[0]
     y = jnp.zeros((m_local * p, w.shape[1]), dtype=jnp.result_type(x.dtype, w.dtype))
@@ -99,7 +113,7 @@ def rs_matmul_ring(x: jax.Array, w: jax.Array, axis_name: str) -> jax.Array:
     steps every device holds the fully-reduced rows it owns.  The accumulator
     hop overlaps the next chunk's matmul.
     """
-    p = jax.lax.axis_size(axis_name)
+    p = _axis_size(axis_name)
     idx = jax.lax.axis_index(axis_name)
     m_full = x.shape[0]
     assert m_full % p == 0, "rows must divide the axis size"
@@ -137,7 +151,7 @@ def make_sharded_ag_matmul(
     fn = ag_matmul_ring if ring else ag_matmul_reference
 
     @functools.partial(
-        jax.shard_map,
+        _shard_map,
         mesh=mesh,
         in_specs=(P(axis_name, None), P(None, axis_name)),
         out_specs=P(None, axis_name),
@@ -155,7 +169,7 @@ def make_sharded_rs_matmul(
     fn = rs_matmul_ring if ring else rs_matmul_reference
 
     @functools.partial(
-        jax.shard_map,
+        _shard_map,
         mesh=mesh,
         in_specs=(P(None, axis_name), P(axis_name, None)),
         out_specs=P(axis_name, None),

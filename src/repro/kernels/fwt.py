@@ -26,6 +26,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import _pallas_compat as _plc
+
 
 def _fwt_block_kernel(x_ref, o_ref, *, block: int):
     """In-VMEM WHT over the last axis of a (rows, block) tile."""
@@ -60,7 +62,7 @@ def fwt_block(
         in_specs=[pl.BlockSpec((rt, block), lambda i: (i, 0))],
         out_specs=pl.BlockSpec((rt, block), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((n_rows, block), x.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_plc.CompilerParams(
             dimension_semantics=("arbitrary",),
         ),
         interpret=interpret,

@@ -19,6 +19,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import _pallas_compat as _plc
+
 
 def _mm_kernel(x_ref, y_ref, o_ref, acc_ref, *, nk: int):
     """One (bm x bk) @ (bk x bn) task; accumulates over the k stream."""
@@ -67,7 +69,7 @@ def streamed_matmul(
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
         out_shape=jax.ShapeDtypeStruct((m, n), jnp.result_type(x.dtype, y.dtype)),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_plc.CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,

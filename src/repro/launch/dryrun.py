@@ -230,7 +230,10 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
     compiled, lowered, meta = lower_cell(arch, shape_name, multi_pod=multi_pod)
     if verbose:
         print(compiled.memory_analysis())  # proves it fits
-        print(compiled.cost_analysis())  # FLOPs/bytes for §Roofline
+        xla_flops, xla_bytes = rmetric.cost_analysis_scalars(
+            compiled.cost_analysis())  # FLOPs/bytes for §Roofline
+        print(f"[dryrun] xla cost_analysis: flops={xla_flops:.3e} "
+              f"bytes={xla_bytes:.3e}")
     result = analyse(compiled, meta)
     print(f"[dryrun] {arch} x {shape_name} x {meta['mesh']}: "
           f"compile={meta['compile_s']}s bottleneck={result['bottleneck']} "

@@ -1,7 +1,11 @@
-"""Serving launcher: batched requests through the streamed-prefill engine.
+"""Serving launcher: continuous-batching streamed engine over N requests.
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-4b \
         --requests 4 --prompt-len 128 --new-tokens 16
+
+Text-only archs go through ``StreamedBatchEngine`` (request queue + slot
+pool, chunked prefill interleaved with batched decode); encoder-decoder and
+prefix-LM archs fall back to the single-request ``ServingEngine``.
 """
 
 from __future__ import annotations
@@ -10,10 +14,12 @@ import argparse
 import time
 
 import jax
+import numpy as np
 
 import repro.configs as configs
 from repro.models import transformer as T
-from repro.runtime.serving import ServeConfig, ServingEngine
+from repro.runtime.serving import (ServeConfig, ServingEngine,
+                                   StreamedBatchEngine)
 
 
 def main() -> None:
@@ -24,35 +30,68 @@ def main() -> None:
     ap.add_argument("--new-tokens", type=int, default=16)
     ap.add_argument("--prefill-chunk", type=int, default=64)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--max-batch", type=int, default=4,
+                    help="decode slots for continuous batching")
+    ap.add_argument("--interleave", type=int, default=1,
+                    help="decode steps per in-flight prefill chunk")
+    ap.add_argument("--autotune", action="store_true",
+                    help="pick chunk/interleave via the paper's generic flow")
+    ap.add_argument("--sequential", action="store_true",
+                    help="force the one-request-at-a-time baseline")
     args = ap.parse_args()
 
     cfg = configs.get_smoke_config(args.arch)
     params = T.init_params(cfg, jax.random.PRNGKey(0))
-    eng = ServingEngine(cfg, params, ServeConfig(
+    scfg = ServeConfig(
         max_seq=args.prompt_len + cfg.prefix_len + args.new_tokens,
         prefill_chunk=args.prefill_chunk,
         max_new_tokens=args.new_tokens,
-        temperature=args.temperature))
+        temperature=args.temperature,
+        max_batch=args.max_batch,
+        decode_interleave=args.interleave)
 
     b = args.requests
     tokens = jax.random.randint(
         jax.random.PRNGKey(1), (b, args.prompt_len), 0, cfg.vocab_size)
-    kw = {}
-    if cfg.is_encoder_decoder:
-        kw["enc_inputs"] = 0.1 * jax.random.normal(
-            jax.random.PRNGKey(2), (b, cfg.encoder_seq, cfg.d_model))
-    if cfg.prefix_len:
-        kw["prefix_embeds"] = 0.1 * jax.random.normal(
-            jax.random.PRNGKey(3), (b, cfg.prefix_len, cfg.d_model))
 
-    t0 = time.perf_counter()
-    out = eng.generate(tokens, **kw)
-    dt = time.perf_counter() - t0
-    total_new = out.shape[0] * out.shape[1]
-    print(f"[serve] {args.arch}: {b} requests x {args.prompt_len} prompt "
-          f"-> {out.shape[1]} new tokens each in {dt:.2f}s "
+    batched = not (cfg.is_encoder_decoder or cfg.prefix_len or args.sequential)
+    if not batched:
+        kw = {}
+        if cfg.is_encoder_decoder:
+            kw["enc_inputs"] = 0.1 * jax.random.normal(
+                jax.random.PRNGKey(2), (b, cfg.encoder_seq, cfg.d_model))
+        if cfg.prefix_len:
+            kw["prefix_embeds"] = 0.1 * jax.random.normal(
+                jax.random.PRNGKey(3), (b, cfg.prefix_len, cfg.d_model))
+        eng = ServingEngine(cfg, params, scfg)
+        t0 = time.perf_counter()
+        out = eng.generate(tokens, **kw)
+        dt = time.perf_counter() - t0
+        rows = out.tolist()
+        total_new = out.shape[0] * out.shape[1]
+        mode = "sequential-batch"
+    else:
+        eng = StreamedBatchEngine(cfg, params, scfg)
+        if args.autotune:
+            plan = eng.autotune(args.prompt_len)
+            print(f"[serve] autotune: {plan.decision} "
+                  f"chunk={plan.prefill_chunk} "
+                  f"interleave={plan.decode_interleave} "
+                  f"(chunk {plan.stage_times.h2d * 1e3:.2f}ms, "
+                  f"decode {plan.stage_times.kex * 1e3:.2f}ms)")
+        t0 = time.perf_counter()
+        uids = [eng.submit(np.asarray(tokens[i])) for i in range(b)]
+        outs = eng.run()
+        dt = time.perf_counter() - t0
+        rows = [outs[u].tolist() for u in uids]
+        total_new = sum(len(r) for r in rows)
+        mode = (f"continuous-batching x{args.max_batch} slots, "
+                f"{eng.decode_steps} batched decode steps")
+
+    print(f"[serve] {args.arch} ({mode}): {b} requests x {args.prompt_len} "
+          f"prompt -> {total_new // b} new tokens each in {dt:.2f}s "
           f"({total_new / dt:.1f} tok/s incl. prefill+compile)")
-    for i, row in enumerate(out.tolist()[: min(3, b)]):
+    for i, row in enumerate(rows[: min(3, b)]):
         print(f"[serve] req{i}: {row[:12]}{'...' if len(row) > 12 else ''}")
 
 

@@ -313,12 +313,16 @@ def decode_attention(
     k_cache: jax.Array,  # (B, S, Hkv, hd)
     v_cache: jax.Array,  # (B, S, Hkv, hd)
     *,
-    cur_len: jax.Array,  # scalar int32: index of the token being generated
+    cur_len: jax.Array,  # int32 scalar or (B,): index of the token generated
     window: int = 0,
     softcap_val: float = 0.0,
     scale: float | None = None,
 ) -> jax.Array:
-    """Single-token attention against a (possibly ring-buffered) KV cache."""
+    """Single-token attention against a (possibly ring-buffered) KV cache.
+
+    ``cur_len`` may be per-batch (continuous batching: each slot sits at its
+    own position), in which case the visibility mask is computed per row.
+    """
     b, s, hkv, hd = k_cache.shape
     g = q.shape[2] // hkv
     scale = scale if scale is not None else 1.0 / math.sqrt(hd)
@@ -327,17 +331,17 @@ def decode_attention(
     sc = jnp.einsum("bqhd,bkhd->bhqk", q, kf.astype(q.dtype),
                     preferred_element_type=jnp.float32) * scale
     sc = layers.softcap(sc, softcap_val)
-    slot = jnp.arange(s)
+    slot = jnp.arange(s)[None, :]  # (1, S)
+    cl = jnp.broadcast_to(jnp.asarray(cur_len, jnp.int32), (b,))[:, None]  # (B, 1)
     if window > 0 and s == window:
         # Ring buffer: slot s holds original position p ≡ s (mod window) with
         # p <= cur_len; valid once written.
-        written = (slot <= cur_len) | (cur_len >= window)
-        ok = written
+        ok = (slot <= cl) | (cl >= window)
     else:
-        ok = slot <= cur_len
+        ok = slot <= cl
         if window > 0:
-            ok = ok & (cur_len - slot < window)
-    sc = jnp.where(ok[None, None, None, :], sc, NEG_INF)
+            ok = ok & (cl - slot < window)
+    sc = jnp.where(ok[:, None, None, :], sc, NEG_INF)
     p = jax.nn.softmax(sc, axis=-1)
     out = jnp.einsum("bhqk,bkhd->bqhd", p.astype(vf.dtype), vf,
                      preferred_element_type=jnp.float32)
@@ -413,9 +417,11 @@ def attention_apply(
 
     if positions is not None and kv_source is None:
         sin, cos = layers.rope_angles(positions, head_dim, rope_theta)
-        q = layers.apply_rope(q, sin[None], cos[None])
+        if positions.ndim == 1:  # shared positions: add the batch axis
+            sin, cos = sin[None], cos[None]
+        q = layers.apply_rope(q, sin, cos)
         if cur_len is None or k.shape[1] == s:  # fresh K (not from cache)
-            k = layers.apply_rope(k, sin[None], cos[None])
+            k = layers.apply_rope(k, sin, cos)
 
     new_cache = cache
     if cur_len is not None and cache is not None and kv_source is None:
@@ -425,8 +431,15 @@ def attention_apply(
             write_at = jnp.mod(cur_len, window)
         else:
             write_at = cur_len
-        k_cache = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype), (0, write_at, 0, 0))
-        v_cache = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype), (0, write_at, 0, 0))
+        if jnp.ndim(cur_len) == 0:
+            k_cache = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype), (0, write_at, 0, 0))
+            v_cache = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype), (0, write_at, 0, 0))
+        else:
+            # Per-slot positions (continuous batching): scatter row i's K/V at
+            # its own write offset.
+            bidx = jnp.arange(b)
+            k_cache = cache["k"].at[bidx, write_at].set(k[:, 0].astype(cache["k"].dtype))
+            v_cache = cache["v"].at[bidx, write_at].set(v[:, 0].astype(cache["v"].dtype))
         new_cache = {"k": k_cache, "v": v_cache}
         out = decode_attention(
             q, k_cache, v_cache, cur_len=cur_len, window=window,

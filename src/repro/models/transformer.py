@@ -514,9 +514,14 @@ def decode_step(
     cfg: ModelConfig, params: Params, tokens: jax.Array, caches: Params,
     cur_len: jax.Array,
 ) -> tuple[jax.Array, Params]:
-    """One decode step: tokens (B,1) at absolute position cur_len."""
+    """One decode step: tokens (B,1) at absolute position cur_len.
+
+    ``cur_len`` is a scalar (whole batch at one position) or a (B,) vector
+    (continuous batching: per-slot positions; rope, cache writes and the
+    attention mask are then applied per row).
+    """
     h = meshutil.shard_batch(_embed_tokens(cfg, params, tokens))
-    positions = cur_len[None] if jnp.ndim(cur_len) == 0 else cur_len
+    positions = cur_len[None] if jnp.ndim(cur_len) == 0 else cur_len[:, None]
     h, caches, _ = forward_hidden(
         cfg, params, h, positions=positions, caches=caches, cur_len=cur_len)
     h = layers.rmsnorm(params["final_norm"], h)

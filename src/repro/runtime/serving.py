@@ -1,4 +1,4 @@
-"""Serving engine: chunked (streamed) prefill + batched decode.
+"""Serving engine: chunked (streamed) prefill + continuous-batching decode.
 
 The paper's streaming flow applied to inference:
 
@@ -11,17 +11,48 @@ The paper's streaming flow applied to inference:
     (paper §4.1) that must complete before decode; the engine stages it
     once.
   * **Decode** — one step per token over the batch; requests are
-    Independent tasks (continuous-batching style slot management).
+    Independent tasks (paper §4.1) admitted into a fixed pool of slots.
+
+Continuous-batching design (``StreamedBatchEngine``):
+
+  * **Slots** — the decode batch has ``max_batch`` fixed slots sharing one
+    batched KV cache of shape (layers, max_batch, max_seq, ...).  Each slot
+    carries its own absolute cache position (``cur``), so rope, the cache
+    write offset and the attention visibility mask are per row
+    (``decode_step`` with a (B,) ``cur_len`` vector).  Inactive slots ride
+    along as padding rows; their cache region is overwritten wholesale at
+    the next admission.
+  * **Admission / interleave** — a new request is prefilled chunk-by-chunk
+    at batch 1 into a private cache; between dispatching chunk t+1 and
+    consuming its result the engine runs ``decode_interleave`` batched
+    decode steps for the active slots — the paper's pipeline with prefill
+    chunks as the ingest (H2D-like) stage and batched decode as KEX.  The
+    finished cache is then scattered into the slot's rows of the global
+    cache.
+  * **Eviction / readmission** — a slot's cache rows and positions can be
+    pulled out (``evict``) and later written back into any free slot
+    (``readmit``); positions travel with the request, so decode resumes
+    exactly where it stopped (preemption / priority scheduling hook).
+  * **Policy** — ``plan_decode_policy`` feeds measured (prefill-chunk,
+    decode-step) ``StageTimes`` through the paper's generic flow (§6,
+    the primitives behind ``streams.plan_streaming``): the R gate decides
+    whether interleaving is worthwhile and ``rmetric.optimal_streams``
+    sizes the prefill chunk count; the interleave ratio is the measured
+    chunk/decode time ratio.
 """
 
 from __future__ import annotations
 
+import collections
 import dataclasses
+import time
 from typing import Any
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
+from repro.core import rmetric
 from repro.models import transformer as T
 from repro.models.transformer import ModelConfig
 
@@ -32,6 +63,9 @@ class ServeConfig:
     prefill_chunk: int = 256  # task size for streamed prefill
     max_new_tokens: int = 32
     temperature: float = 0.0  # 0 = greedy
+    # continuous batching
+    max_batch: int = 4  # decode slots
+    decode_interleave: int = 1  # decode steps run per in-flight prefill chunk
 
 
 class ServingEngine:
@@ -93,6 +127,22 @@ class ServingEngine:
 
         Returns (last logits, caches, total prompt length incl. prefix).
         """
+        logits, caches, pos = None, None, 0
+        for logits, caches, pos in self.iter_prefill_chunks(
+                tokens, enc_inputs=enc_inputs, prefix_embeds=prefix_embeds):
+            pass
+        return logits, caches, pos
+
+    def iter_prefill_chunks(
+        self, tokens: jax.Array, *, enc_inputs=None, prefix_embeds=None
+    ):
+        """Generator form of the streamed prefill: yields after *dispatching*
+        each chunk (JAX dispatch is async), so a caller can overlap other
+        device work — the continuous-batching engine interleaves batched
+        decode steps here — before the next chunk is enqueued.
+
+        Yields (logits-so-far, caches, position-after-chunk) per chunk.
+        """
         cfg, scfg = self.cfg, self.scfg
         b, s = tokens.shape
         enc_out = (
@@ -105,7 +155,6 @@ class ServingEngine:
         # prefix (SYNC transfer) rides with the first chunk
         chunk = min(scfg.prefill_chunk, s)
         pos = 0
-        logits = None
         first = True
         for lo in range(0, s, chunk):
             piece = tokens[:, lo: lo + chunk]
@@ -116,7 +165,7 @@ class ServingEngine:
             pos += piece.shape[1] + (cfg.prefix_len if first and
                                      prefix_embeds is not None else 0)
             first = False
-        return logits, caches, pos
+            yield logits, caches, pos
 
     # -- decode -------------------------------------------------------------------
 
@@ -142,3 +191,333 @@ class ServingEngine:
             logits, caches = self._decode_jit(
                 self.params, nxt, caches, jnp.int32(pos + i))
         return jnp.concatenate(out, axis=1)
+
+
+# ----------------------------------------------------------------------------
+# Continuous batching: request queue + slot manager over one batched cache.
+# ----------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class Request:
+    """One Independent task (paper §4.1) in the serving queue."""
+
+    uid: int
+    tokens: np.ndarray  # (prompt_len,) int32
+    max_new_tokens: int
+
+
+@dataclasses.dataclass
+class _Slot:
+    """Decode-batch slot bookkeeping (positions live here, not in the cache)."""
+
+    index: int
+    uid: int | None = None  # None = free
+    cur: int = 0  # absolute cache position of the next KV write
+    pending: int = 0  # last sampled token (decode input)
+    emitted: list[int] = dataclasses.field(default_factory=list)
+    max_new: int = 0
+
+    @property
+    def free(self) -> bool:
+        return self.uid is None
+
+    @property
+    def done(self) -> bool:
+        return self.uid is not None and len(self.emitted) >= self.max_new
+
+
+@dataclasses.dataclass
+class EvictedRequest:
+    """A preempted request: cache rows + positions, ready to readmit."""
+
+    uid: int
+    caches: Any  # (layers, 1, max_seq, ...) slice of the global cache
+    cur: int
+    pending: int
+    emitted: list[int]
+    max_new: int
+
+
+@dataclasses.dataclass(frozen=True)
+class ServingPlan:
+    """Chunk/interleave policy from the paper's generic flow."""
+
+    decision: str  # streams.plan_streaming decision string
+    prefill_chunk: int
+    decode_interleave: int
+    stage_times: rmetric.StageTimes
+
+
+def plan_decode_policy(
+    stage_times: rmetric.StageTimes, *, prompt_len: int,
+    max_interleave: int = 8, min_chunk: int = 16,
+) -> ServingPlan:
+    """Pick (prefill_chunk, decode_interleave) from measured stage times.
+
+    ``stage_times``: h2d = one prefill chunk (the ingest stage of a new
+    request), kex = one batched decode step (the steady compute stage).
+    Requests are Independent tasks, so the paper's generic flow (§6)
+    applies with its two primitives used directly: the R gate decides
+    whether chunked-prefill interleaving is worthwhile at all, and
+    ``optimal_streams`` picks the pipeline depth (number of prefill
+    chunks); the interleave ratio equalizes the two stages so neither
+    starves.
+    """
+    decision = rmetric.streaming_decision(stage_times)
+    if decision is rmetric.StreamDecision.NOT_WORTHWHILE:
+        # Chunk cost is negligible next to decode: interleaving buys nothing,
+        # prefill in one task.
+        return ServingPlan(decision.value, max(min_chunk, prompt_len), 1,
+                           stage_times)
+    if decision is rmetric.StreamDecision.STREAM:
+        n_chunks = max(1, min(
+            rmetric.optimal_streams(stage_times, max_streams=16),
+            prompt_len // min_chunk))
+    else:
+        # R above the paper's band ("offload-unprofitable"): here it means a
+        # prefill chunk dwarfs a decode step, so head-of-line blocking — not
+        # offload cost — is the concern.  Chunk as finely as allowed and
+        # interleave at the cap so active slots keep decoding underneath.
+        n_chunks = max(1, prompt_len // min_chunk)
+    chunk = max(min_chunk, -(-prompt_len // n_chunks))
+    ratio = stage_times.h2d / max(stage_times.kex, 1e-9)
+    interleave = int(np.clip(round(ratio), 1, max_interleave))
+    return ServingPlan(decision.value, chunk, interleave, stage_times)
+
+
+class StreamedBatchEngine:
+    """Continuous-batching streamed serving engine.
+
+    Requests are admitted into ``max_batch`` slots of one batched KV cache;
+    incoming prompts are prefilled in chunks interleaved with batched decode
+    steps for the already-active slots (see module docstring).  Greedy
+    decode output is token-identical to ``ServingEngine.generate`` per
+    request.
+    """
+
+    def __init__(self, cfg: ModelConfig, params: Any, scfg: ServeConfig):
+        if cfg.is_encoder_decoder or cfg.prefix_len > 0:
+            raise NotImplementedError(
+                "continuous batching currently serves text-only requests; "
+                "use ServingEngine for encoder-decoder / prefix-LM")
+        if scfg.max_batch < 1:
+            raise ValueError(  # an empty slot pool would spin forever
+                f"max_batch must be >= 1, got {scfg.max_batch}")
+        self.cfg = cfg
+        self.params = params
+        self.scfg = scfg
+        self.single = ServingEngine(cfg, params, scfg)  # b=1 prefill machinery
+        b = scfg.max_batch
+        self.caches = T.init_cache(cfg, b, scfg.max_seq, ring=False)
+        self.slots = [_Slot(index=i) for i in range(b)]
+        self.queue: collections.deque[Request] = collections.deque()
+        self.outputs: dict[int, np.ndarray] = {}
+        self._next_uid = 0
+        self.decode_steps = 0  # batched decode steps run (for benchmarks)
+
+        self._decode_jit = jax.jit(
+            lambda p, t, c, l: T.decode_step(cfg, p, t, c, l))
+        # Scatter one request's (b=1) cache into slot i of the global cache /
+        # gather it back out.  Slot index is traced, so one compile serves
+        # every slot.
+        self._scatter_jit = jax.jit(lambda g, l, i: jax.tree.map(
+            lambda gg, ll: jax.lax.dynamic_update_slice_in_dim(
+                gg, ll.astype(gg.dtype), i, axis=1), g, l))
+        self._gather_jit = jax.jit(lambda g, i: jax.tree.map(
+            lambda gg: jax.lax.dynamic_slice_in_dim(gg, i, 1, axis=1), g))
+
+    # -- queue ----------------------------------------------------------------
+
+    def submit(self, tokens, max_new_tokens: int | None = None) -> int:
+        """Queue one prompt; returns its uid."""
+        tokens = np.asarray(tokens, np.int32).reshape(-1)
+        if tokens.size == 0:
+            raise ValueError("prompt must contain at least one token")
+        max_new = (self.scfg.max_new_tokens if max_new_tokens is None
+                   else max_new_tokens)
+        if max_new < 1:
+            raise ValueError(  # admission always samples one token
+                f"max_new_tokens must be >= 1, got {max_new}")
+        if len(tokens) + max_new > self.scfg.max_seq:
+            raise ValueError(
+                f"prompt {len(tokens)} + max_new {max_new} exceeds "
+                f"max_seq {self.scfg.max_seq}")
+        uid = self._next_uid
+        self._next_uid += 1
+        self.queue.append(Request(uid, tokens, max_new))
+        return uid
+
+    @property
+    def active_slots(self) -> list[_Slot]:
+        return [s for s in self.slots if not s.free]
+
+    @property
+    def pending(self) -> bool:
+        return bool(self.queue) or bool(self.active_slots)
+
+    # -- slot plumbing ---------------------------------------------------------
+
+    @staticmethod
+    def _slot_key(uid: int, step: int) -> jax.Array:
+        """Sampling key derived from (uid, step) so a request's draws don't
+        depend on batch composition."""
+        return jax.random.fold_in(
+            jax.random.fold_in(jax.random.PRNGKey(0), uid), step)
+
+    def _sample(self, logits_row: jax.Array, uid: int, step: int) -> int:
+        """Per-request sampling: greedy, or temperature via the slot key."""
+        if self.scfg.temperature > 0.0:
+            return int(jax.random.categorical(
+                self._slot_key(uid, step),
+                logits_row / self.scfg.temperature))
+        return int(jnp.argmax(logits_row, axis=-1))
+
+    def _admit(self, req: Request, slot: _Slot) -> None:
+        """Chunked prefill of ``req`` interleaved with batched decode steps,
+        then scatter its cache into ``slot``'s rows."""
+        tokens = jnp.asarray(req.tokens[None], jnp.int32)
+        logits = caches = None
+        pos = 0
+        for logits, caches, pos in self.single.iter_prefill_chunks(tokens):
+            # Chunk is dispatched (async); decode the active slots while it
+            # is in flight — prefill chunk t+1 overlapping decode compute.
+            for _ in range(self.scfg.decode_interleave):
+                if self.active_slots:
+                    self._decode_tick()
+        self.caches = self._scatter_jit(
+            self.caches, caches, jnp.int32(slot.index))
+        first = self._sample(logits[0, -1], req.uid, 0)
+        slot.uid = req.uid
+        slot.cur = pos
+        slot.pending = first
+        slot.emitted = [first]
+        slot.max_new = req.max_new_tokens
+        self._reap(slot)
+
+    def _reap(self, slot: _Slot) -> None:
+        """Free a finished slot and record its output."""
+        if slot.done:
+            self.outputs[slot.uid] = np.asarray(slot.emitted, np.int32)
+            slot.uid = None
+            slot.emitted = []
+
+    def _decode_tick(self) -> None:
+        """One batched decode step for all slots (inactive rows are padding)."""
+        act = self.active_slots
+        if not act:
+            return
+        b = self.scfg.max_batch
+        toks = np.zeros((b, 1), np.int32)
+        cur = np.zeros((b,), np.int32)
+        for s in act:
+            toks[s.index, 0] = s.pending
+            cur[s.index] = s.cur
+        logits, self.caches = self._decode_jit(
+            self.params, jnp.asarray(toks), self.caches, jnp.asarray(cur))
+        self.decode_steps += 1
+        # One batched pick + one device-to-host transfer per tick (instead
+        # of a tiny kernel and a blocking sync per slot).
+        if self.scfg.temperature > 0.0:
+            keys = jnp.stack([self._slot_key(s.uid, len(s.emitted))
+                              for s in act])
+            rows = logits[jnp.asarray([s.index for s in act]), -1]
+            draws = np.asarray(jax.vmap(jax.random.categorical)(
+                keys, rows / self.scfg.temperature))
+            picks = {s.index: int(draws[j]) for j, s in enumerate(act)}
+        else:
+            greedy = np.asarray(jnp.argmax(logits[:, -1], axis=-1))
+            picks = {s.index: int(greedy[s.index]) for s in act}
+        for s in act:
+            nxt = picks[s.index]
+            s.cur += 1
+            s.pending = nxt
+            s.emitted.append(nxt)
+            self._reap(s)
+
+    # -- scheduling loop -------------------------------------------------------
+
+    def step(self) -> None:
+        """One scheduling quantum: admit queued requests into free slots
+        (chunked prefill, interleaved), else run one batched decode step."""
+        free = [s for s in self.slots if s.free]
+        if self.queue and free:
+            burst = [self.queue.popleft()
+                     for _ in range(min(len(free), len(self.queue)))]
+            for req, slot in zip(burst, free):
+                self._admit(req, slot)
+        else:
+            self._decode_tick()
+
+    def run(self) -> dict[int, np.ndarray]:
+        """Drain the queue and all active slots; returns uid -> tokens for
+        the requests finished since the last ``run`` (the outputs buffer is
+        handed over, not accumulated across calls)."""
+        while self.pending:
+            self.step()
+        done, self.outputs = self.outputs, {}
+        return done
+
+    # -- eviction / readmission ------------------------------------------------
+
+    def evict(self, uid: int) -> EvictedRequest:
+        """Pull a request out of its slot (cache rows + positions)."""
+        slot = next((s for s in self.slots if s.uid == uid), None)
+        if slot is None:
+            raise KeyError(f"uid {uid} not active")
+        ev = EvictedRequest(
+            uid=uid,
+            caches=self._gather_jit(self.caches, jnp.int32(slot.index)),
+            cur=slot.cur, pending=slot.pending,
+            emitted=list(slot.emitted), max_new=slot.max_new)
+        slot.uid = None
+        slot.emitted = []
+        return ev
+
+    def readmit(self, ev: EvictedRequest) -> int:
+        """Write an evicted request back into any free slot; positions are
+        preserved so decode resumes exactly where it stopped."""
+        slot = next((s for s in self.slots if s.free), None)
+        if slot is None:
+            raise RuntimeError("no free slot to readmit into")
+        self.caches = self._scatter_jit(
+            self.caches, ev.caches, jnp.int32(slot.index))
+        slot.uid = ev.uid
+        slot.cur = ev.cur
+        slot.pending = ev.pending
+        slot.emitted = list(ev.emitted)
+        slot.max_new = ev.max_new
+        return slot.index
+
+    # -- policy ----------------------------------------------------------------
+
+    def measure_stage_times(self, prompt_len: int) -> rmetric.StageTimes:
+        """Time one prefill chunk and one batched decode step (both warmed)
+        on synthetic data; the paper's stage-by-stage methodology (§3.3)."""
+        chunk = min(self.scfg.prefill_chunk, prompt_len)
+        toks = jnp.zeros((1, chunk), jnp.int32)
+        caches = T.init_cache(self.cfg, 1, self.scfg.max_seq, ring=False)
+        fn = self.single._prefill_chunk_fn(chunk, True, 0)
+        jax.block_until_ready(fn(self.params, caches, toks, None, None))
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(self.params, caches, toks, None, None))
+        t_chunk = time.perf_counter() - t0
+
+        b = self.scfg.max_batch
+        dt = jnp.zeros((b, 1), jnp.int32)
+        dl = jnp.zeros((b,), jnp.int32)
+        out = self._decode_jit(self.params, dt, self.caches, dl)
+        jax.block_until_ready(out[0])
+        t0 = time.perf_counter()
+        logits, _ = self._decode_jit(self.params, dt, self.caches, dl)
+        jax.block_until_ready(logits)
+        t_decode = time.perf_counter() - t0
+        return rmetric.StageTimes(h2d=t_chunk, kex=t_decode)
+
+    def autotune(self, prompt_len: int) -> ServingPlan:
+        """Measure stage times and apply the planned chunk/interleave."""
+        plan = plan_decode_policy(
+            self.measure_stage_times(prompt_len), prompt_len=prompt_len)
+        self.scfg.prefill_chunk = plan.prefill_chunk
+        self.scfg.decode_interleave = plan.decode_interleave
+        return plan

@@ -1,0 +1,135 @@
+"""Fallback shim for ``hypothesis`` when the package is not installed.
+
+The test-suite uses a narrow slice of hypothesis: ``@given(**strategies)``
+with ``@settings(max_examples=N, deadline=None)`` over finite strategies
+(``sampled_from`` / ``integers`` / ``floats``).  This shim replays a
+deterministic example set drawn from the same strategies, so the tests keep
+their property-test shape (and keep using real hypothesis when available)
+without a hard dependency.
+
+Activated by ``tests/conftest.py`` only when ``import hypothesis`` fails.
+"""
+
+from __future__ import annotations
+
+import functools
+import inspect
+import itertools
+import random
+import types
+
+_DEFAULT_MAX_EXAMPLES = 100
+
+
+class _Strategy:
+    """A value source that can enumerate boundary examples and draw randoms."""
+
+    def __init__(self, boundary, draw):
+        self.boundary = list(boundary)  # always-included examples
+        self.draw = draw  # rng -> one value
+
+
+def sampled_from(options):
+    options = list(options)
+    return _Strategy(options, lambda rng: rng.choice(options))
+
+
+def integers(min_value, max_value):
+    edges = sorted({min_value, max_value, (min_value + max_value) // 2})
+    return _Strategy(edges, lambda rng: rng.randint(min_value, max_value))
+
+
+def floats(min_value, max_value, **_kw):
+    edges = sorted({min_value, max_value, 0.5 * (min_value + max_value)})
+    return _Strategy(edges, lambda rng: rng.uniform(min_value, max_value))
+
+
+def booleans():
+    return _Strategy([False, True], lambda rng: bool(rng.getrandbits(1)))
+
+
+def just(value):
+    return _Strategy([value], lambda rng: value)
+
+
+def settings(max_examples: int = _DEFAULT_MAX_EXAMPLES, **_ignored):
+    """Decorator recording the example budget (deadline etc. are no-ops).
+
+    Works in either decorator order: the attribute is read at call time by
+    the ``given`` runner, so setting it on an already-built runner (the
+    ``@settings`` outermost order real hypothesis also accepts) works too.
+    """
+
+    def deco(fn):
+        fn._shim_max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def _example_sets(strategies: dict, max_examples: int):
+    """Deterministic examples: full boundary cross-product if it fits the
+    budget, otherwise boundary corners + random draws up to the budget."""
+    names = list(strategies)
+    space = 1
+    for s in strategies.values():
+        space *= max(1, len(s.boundary))
+    if space <= max_examples:
+        for combo in itertools.product(*(strategies[n].boundary for n in names)):
+            yield dict(zip(names, combo))
+        return
+    rng = random.Random(0)
+    # diagonal pass over boundaries, then random fill
+    width = max(len(s.boundary) for s in strategies.values())
+    n_diag = min(width, max_examples)
+    for i in range(n_diag):
+        yield {
+            n: strategies[n].boundary[i % len(strategies[n].boundary)]
+            for n in names
+        }
+    for _ in range(max_examples - n_diag):
+        yield {n: strategies[n].draw(rng) for n in names}
+
+
+def given(**strategies):
+    """Replay the strategy examples through the wrapped test."""
+
+    def deco(fn):
+        inner = getattr(fn, "__wrapped__", fn)
+
+        @functools.wraps(inner)
+        def runner(*args, **kwargs):
+            # Read the budget at call time so @settings works whether it is
+            # applied under or over @given.
+            max_examples = getattr(
+                runner, "_shim_max_examples",
+                getattr(fn, "_shim_max_examples", _DEFAULT_MAX_EXAMPLES))
+            for example in _example_sets(strategies, max_examples):
+                inner(*args, **example, **kwargs)
+
+        # Hide the strategy params from pytest's fixture resolution (real
+        # hypothesis does the same); __signature__ overrides __wrapped__.
+        sig = inspect.signature(inner)
+        runner.__signature__ = sig.replace(parameters=[
+            p for name, p in sig.parameters.items() if name not in strategies])
+        return runner
+
+    return deco
+
+
+def install() -> None:
+    """Register shim modules as ``hypothesis`` / ``hypothesis.strategies``."""
+    import sys
+
+    if "hypothesis" in sys.modules:
+        return
+    hyp = types.ModuleType("hypothesis")
+    hyp.given = given
+    hyp.settings = settings
+    hyp.__version__ = "0.0.0-shim"
+    st_mod = types.ModuleType("hypothesis.strategies")
+    for name in ("sampled_from", "integers", "floats", "booleans", "just"):
+        setattr(st_mod, name, globals()[name])
+    hyp.strategies = st_mod
+    sys.modules["hypothesis"] = hyp
+    sys.modules["hypothesis.strategies"] = st_mod

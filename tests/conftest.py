@@ -4,6 +4,19 @@ device; multi-device tests spawn subprocesses with their own flags."""
 import jax
 import pytest
 
+try:
+    import hypothesis  # noqa: F401  (real package wins when installed)
+except ImportError:
+    import importlib.util as _ilu
+    import os as _os
+
+    _spec = _ilu.spec_from_file_location(
+        "_hypothesis_compat",
+        _os.path.join(_os.path.dirname(__file__), "_hypothesis_compat.py"))
+    _mod = _ilu.module_from_spec(_spec)
+    _spec.loader.exec_module(_mod)
+    _mod.install()
+
 
 @pytest.fixture(scope="session")
 def rng():

@@ -100,6 +100,9 @@ class TestHostExecutor:
         out2, stats2 = ex.multi_stream_run(tasks)
         np.testing.assert_allclose(np.asarray(out1), np.asarray(out2))
         assert stats1.h2d > 0 and stats1.kex > 0  # stage-by-stage measured
+        # multi-stream stats carry cumulative per-stage busy times too
+        assert stats2.h2d > 0 and stats2.kex > 0 and stats2.d2h >= 0
+        assert stats2.wall > 0
 
     def test_measure_r(self):
         fn = jax.jit(lambda x: jnp.tanh(x @ x.T).sum())
@@ -107,6 +110,32 @@ class TestHostExecutor:
         tasks = [np.ones((64, 64), np.float32)] * 4
         r, stats = ex.measure_r(tasks)
         assert 0.0 <= r <= 1.0
+
+
+class TestBatchSchedule:
+    @given(n=st.integers(0, 12), streams_n=st.sampled_from([1, 2, 4]))
+    @settings(max_examples=30, deadline=None)
+    def test_complete_and_disjoint(self, n, streams_n):
+        costs = [float(i % 5 + 1) for i in range(n)]
+        lanes = streams.batch_schedule(costs, streams_n)
+        assert len(lanes) == streams_n
+        flat = sorted(i for lane in lanes for i in lane)
+        assert flat == list(range(n))  # every task exactly once
+
+    def test_lpt_balances(self):
+        lanes = streams.batch_schedule([8.0, 7.0, 6.0, 5.0, 4.0, 3.0], 2)
+        loads = [sum((8.0, 7.0, 6.0, 5.0, 4.0, 3.0)[i] for i in lane)
+                 for lane in lanes]
+        assert max(loads) - min(loads) <= 1.0  # LPT keeps lanes even
+
+    def test_fewer_tasks_than_streams(self):
+        lanes = streams.batch_schedule([2.0, 1.0], 4)
+        assert sum(len(lane) for lane in lanes) == 2
+        assert all(len(lane) <= 1 for lane in lanes)
+
+    def test_invalid_stream_count(self):
+        with pytest.raises(ValueError):
+            streams.batch_schedule([1.0], 0)
 
 
 class TestGenericFlow:
