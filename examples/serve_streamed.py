@@ -87,6 +87,26 @@ def main() -> None:
               f"decode steps): token-identical={same}")
         assert same
 
+        # paged KV cache: same outputs, HBM per request tracks its actual
+        # length (pages allocated lazily from a shared pool) not max_seq.
+        block = 16
+        pseq = -(-max_seq // block) * block
+        pge = StreamedBatchEngine(cfg, params, ServeConfig(
+            max_seq=pseq, prefill_chunk=args.chunk,
+            max_new_tokens=args.new_tokens, max_batch=2,
+            paged=True, block_size=block))
+        puids = [pge.submit(np.asarray(tokens[i])) for i in range(b)]
+        pouts = pge.run()
+        psame = all(
+            pouts[u].tolist() == toks[i].tolist()
+            for i, u in enumerate(puids))
+        st = pge.kv.stats()
+        print(f"[serve] paged KV ({block}-row pages): token-identical="
+              f"{psame}; peak {st.peak_in_use}/{st.capacity} pages "
+              f"({st.page_bytes}B/page) vs {pseq // block} pages/slot "
+              f"contiguous")
+        assert psame
+
 
 if __name__ == "__main__":
     main()

@@ -1,6 +1,7 @@
 """Pallas TPU kernels (validated in interpret mode on CPU; see EXAMPLE.md):
-streamed_matmul, flash_attention, fwt, nw_tile — each with a jit wrapper in
-ops.py and a pure-jnp oracle in ref.py."""
+streamed_matmul, flash_attention, paged_attention (decode from the paged KV
+pool), fwt, nw_tile — each with a jit wrapper in ops.py and a pure-jnp
+oracle in ref.py."""
 
 from repro.kernels import ops, ref
 

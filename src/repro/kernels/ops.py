@@ -16,6 +16,7 @@ import jax.numpy as jnp
 from repro.kernels import flash_attention as _fa
 from repro.kernels import fwt as _fwt
 from repro.kernels import nw_tile as _nw
+from repro.kernels import paged_attention as _pa
 from repro.kernels import ssd_chunk as _ssd
 from repro.kernels import streamed_matmul as _mm
 
@@ -66,6 +67,30 @@ def flash_attention(
         qf, kf, vf, causal=causal, window=window, softcap=softcap,
         scale=scale, block_q=block_q, block_k=block_k, interpret=interpret)
     return out.reshape(b, h, s, hd).transpose(0, 2, 1, 3)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("window", "softcap", "scale", "interpret"))
+def paged_attention(
+    q,  # (B, H, hd) single-token queries
+    k_pool,  # (num_blocks, block_size, Hkv, hd)
+    v_pool,
+    page_table,  # (B, n_pages) int32
+    cur_len,  # (B,) int32
+    *,
+    window=0,
+    softcap=0.0,
+    scale=None,
+    interpret=None,
+):
+    """Decode attention directly from the paged KV pool: the page table is
+    scalar-prefetched so the gather happens inside the kernel's block-fetch
+    DMAs instead of materializing a contiguous copy in HBM."""
+    interpret = _default_interpret() if interpret is None else interpret
+    scale = scale if scale is not None else 1.0 / math.sqrt(q.shape[-1])
+    return _pa.paged_attention_kernel(
+        q, k_pool, v_pool, page_table, cur_len, window=window,
+        softcap=softcap, scale=scale, interpret=interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("block", "row_tile", "interpret"))

@@ -1,0 +1,154 @@
+"""Paged decode-attention Pallas kernel: block-wise attention from the pool.
+
+The TPU twin of ``repro.models.attention.paged_decode_attention``: instead
+of gathering a slot's pages into a contiguous (B, S, Hkv, hd) view in HBM,
+the page table is **scalar-prefetched** and each grid step's K/V BlockSpec
+indexes the physical pool block directly — the gather happens inside the
+block-fetch DMA, which Mosaic pipelines against the previous page's MXU
+compute (the paper's stream overlap, with pages as the Independent transfer
+tasks).
+
+Grid: (batch, kv_heads, n_pages) — the page stream is the innermost
+(sequential) dimension; the online-softmax state (m, l, acc) lives in VMEM
+scratch across it, exactly like ``flash_attention``'s KV stream.  Pages
+fully beyond a row's ``cur_len`` (or outside its sliding window) skip
+compute via ``pl.when``; in-page masking is positional (iota vs ``cur_len``),
+so trash-page garbage never contributes.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import _pallas_compat as _plc
+
+NEG_INF = -1e30
+
+
+def _paged_kernel(
+    pt_ref,  # SMEM (B, n_pages) int32: scalar-prefetched page table
+    cl_ref,  # SMEM (B,) int32: per-row current position
+    q_ref,  # (1, 1, g, hd)
+    k_ref,  # (1, bs, 1, hd): one physical page of this kv head
+    v_ref,  # (1, bs, 1, hd)
+    o_ref,  # (1, 1, g, hd)
+    m_ref,  # VMEM (g,)
+    l_ref,  # VMEM (g,)
+    acc_ref,  # VMEM (g, hd)
+    *,
+    n_pages: int,
+    block_size: int,
+    window: int,
+    softcap: float,
+    scale: float,
+):
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    cur = cl_ref[b]
+    # Page-level pruning: skip pages entirely past cur (unallocated tail —
+    # their table entries point at the trash page) or behind the window.
+    live = j * block_size <= cur
+    if window > 0:
+        live = live & (cur - (j * block_size + block_size - 1) < window)
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0, 0]  # (g, hd)
+        k = k_ref[0, :, 0, :]  # (bs, hd)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale
+        if softcap > 0.0:
+            s = softcap * jnp.tanh(s / softcap)
+
+        g, bs = s.shape
+        pos = j * block_size + jax.lax.broadcasted_iota(jnp.int32, (g, bs), 1)
+        ok = pos <= cur
+        if window > 0:
+            ok = ok & (cur - pos < window)
+        s = jnp.where(ok, s, NEG_INF)
+
+        m_old = m_ref[...]
+        m_new = jnp.maximum(m_old, s.max(axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_old - m_new)
+        l_ref[...] = alpha * l_ref[...] + p.sum(axis=1)
+        pv = jax.lax.dot_general(
+            p.astype(v_ref.dtype), v_ref[0, :, 0, :], (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        acc_ref[...] = alpha[:, None] * acc_ref[...] + pv
+        m_ref[...] = m_new
+
+    @pl.when(j == n_pages - 1)
+    def _flush():
+        l = l_ref[...]
+        l = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, 0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def paged_attention_kernel(
+    q: jax.Array,  # (B, H, hd) single-token queries (H = Hkv * G)
+    k_pool: jax.Array,  # (num_blocks, block_size, Hkv, hd)
+    v_pool: jax.Array,  # (num_blocks, block_size, Hkv, hd)
+    page_table: jax.Array,  # (B, n_pages) int32
+    cur_len: jax.Array,  # (B,) int32
+    *,
+    window: int = 0,
+    softcap: float = 0.0,
+    scale: float,
+    interpret: bool = False,
+) -> jax.Array:
+    b, h, hd = q.shape
+    nb, bs, hkv, _ = k_pool.shape
+    assert h % hkv == 0, (h, hkv)
+    g = h // hkv
+    n_pages = page_table.shape[1]
+    # Head layout matches _broadcast_kv: query head i attends kv head i // g.
+    qr = q.reshape(b, hkv, g, hd)
+
+    kern = functools.partial(
+        _paged_kernel, n_pages=n_pages, block_size=bs, window=window,
+        softcap=softcap, scale=scale)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, hkv, n_pages),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, hd), lambda bb, hh, jj, pt, cl: (bb, hh, 0, 0)),
+            pl.BlockSpec((1, bs, 1, hd),
+                         lambda bb, hh, jj, pt, cl: (pt[bb, jj], 0, hh, 0)),
+            pl.BlockSpec((1, bs, 1, hd),
+                         lambda bb, hh, jj, pt, cl: (pt[bb, jj], 0, hh, 0)),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, 1, g, hd), lambda bb, hh, jj, pt, cl: (bb, hh, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((g,), jnp.float32),
+            pltpu.VMEM((g,), jnp.float32),
+            pltpu.VMEM((g, hd), jnp.float32),
+        ],
+    )
+
+    out = pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, hkv, g, hd), q.dtype),
+        compiler_params=_plc.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(page_table.astype(jnp.int32), cur_len.astype(jnp.int32), qr,
+      k_pool, v_pool)
+    return out.reshape(b, h, hd)

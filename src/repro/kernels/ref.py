@@ -41,6 +41,47 @@ def attention_ref(
     return out.astype(q.dtype)
 
 
+def paged_attention_ref(
+    q: jax.Array,  # (B, H, hd) single-token queries (H = Hkv * G)
+    k_pool: jax.Array,  # (num_blocks, block_size, Hkv, hd)
+    v_pool: jax.Array,  # (num_blocks, block_size, Hkv, hd)
+    page_table: jax.Array,  # (B, n_pages) int32
+    cur_len: jax.Array,  # (B,) int32
+    *,
+    window: int = 0,
+    softcap: float = 0.0,
+    scale: float,
+) -> jax.Array:
+    """Pure-jnp oracle for the paged decode-attention kernel: gather each
+    row's pages into a contiguous logical view, then masked attention with
+    the per-row ``cur_len`` visibility cut."""
+    b, h, hd = q.shape
+    nb, bs, hkv, _ = k_pool.shape
+    g = h // hkv
+    n_pages = page_table.shape[1]
+    s_log = n_pages * bs
+    k = k_pool[page_table].reshape(b, s_log, hkv, hd)
+    v = v_pool[page_table].reshape(b, s_log, hkv, hd)
+    kf = jnp.broadcast_to(
+        k[:, :, :, None], (b, s_log, hkv, g, hd)).reshape(b, s_log, h, hd)
+    vf = jnp.broadcast_to(
+        v[:, :, :, None], (b, s_log, hkv, g, hd)).reshape(b, s_log, h, hd)
+
+    s = jnp.einsum("bhd,bkhd->bhk", q.astype(jnp.float32),
+                   kf.astype(jnp.float32)) * scale
+    if softcap > 0.0:
+        s = softcap * jnp.tanh(s / softcap)
+    pos = jnp.arange(s_log)[None, :]  # (1, S)
+    cl = cur_len.astype(jnp.int32)[:, None]  # (B, 1)
+    ok = pos <= cl
+    if window > 0:
+        ok = ok & (cl - pos < window)
+    s = jnp.where(ok[:, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhk,bkhd->bhd", p, vf.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
 def fwt_ref(x: jax.Array) -> jax.Array:
     """Unnormalized Walsh-Hadamard transform over the last axis."""
     n = x.shape[-1]

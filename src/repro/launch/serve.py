@@ -38,17 +38,30 @@ def main() -> None:
                     help="pick chunk/interleave via the paper's generic flow")
     ap.add_argument("--sequential", action="store_true",
                     help="force the one-request-at-a-time baseline")
+    ap.add_argument("--paged", action="store_true",
+                    help="page the batched KV cache (global pool + free "
+                         "list + per-slot page tables)")
+    ap.add_argument("--block-size", type=int, default=16,
+                    help="cache rows per KV page (paged mode)")
+    ap.add_argument("--num-blocks", type=int, default=None,
+                    help="page-pool size; default = contiguous-parity")
     args = ap.parse_args()
 
     cfg = configs.get_smoke_config(args.arch)
     params = T.init_params(cfg, jax.random.PRNGKey(0))
+    max_seq = args.prompt_len + cfg.prefix_len + args.new_tokens
+    if args.paged:  # pages must tile the cache
+        max_seq = -(-max_seq // args.block_size) * args.block_size
     scfg = ServeConfig(
-        max_seq=args.prompt_len + cfg.prefix_len + args.new_tokens,
+        max_seq=max_seq,
         prefill_chunk=args.prefill_chunk,
         max_new_tokens=args.new_tokens,
         temperature=args.temperature,
         max_batch=args.max_batch,
-        decode_interleave=args.interleave)
+        decode_interleave=args.interleave,
+        paged=args.paged,
+        block_size=args.block_size,
+        num_blocks=args.num_blocks)
 
     b = args.requests
     tokens = jax.random.randint(
@@ -87,6 +100,11 @@ def main() -> None:
         total_new = sum(len(r) for r in rows)
         mode = (f"continuous-batching x{args.max_batch} slots, "
                 f"{eng.decode_steps} batched decode steps")
+        if args.paged:
+            st = eng.kv.stats(active_slots=eng.peak_active)
+            mode += (f", paged block={eng.kv.block_size} "
+                     f"(peak {st.peak_in_use}/{st.capacity} pages, "
+                     f"{st.page_bytes}B/page)")
 
     print(f"[serve] {args.arch} ({mode}): {b} requests x {args.prompt_len} "
           f"prompt -> {total_new // b} new tokens each in {dt:.2f}s "

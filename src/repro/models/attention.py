@@ -348,6 +348,36 @@ def decode_attention(
     return out.astype(q.dtype)
 
 
+def paged_decode_attention(
+    q: jax.Array,  # (B, 1, H, hd)
+    k_pool: jax.Array,  # (num_blocks, block_size, Hkv, hd) global page pool
+    v_pool: jax.Array,  # (num_blocks, block_size, Hkv, hd)
+    page_table: jax.Array,  # (B, n_pages) int32: logical page -> pool block
+    *,
+    cur_len: jax.Array,  # (B,) int32: index of the token generated per row
+    window: int = 0,
+    softcap_val: float = 0.0,
+    scale: float | None = None,
+) -> jax.Array:
+    """Single-token attention against the paged KV pool (gather reference).
+
+    Each row's logical sequence is the concatenation of its page-table
+    entries (position p lives in page ``p // block_size`` at offset
+    ``p % block_size``); after the gather the per-row ``cur_len`` visibility
+    mask is applied exactly as in :func:`decode_attention`, so unallocated /
+    stale pages (mapped to the trash block) never contribute.  The Pallas
+    kernel twin (``repro.kernels.paged_attention``) streams the same pages
+    block-wise without materializing the gathered view in HBM.
+    """
+    b, n_pages = page_table.shape
+    nb, bs, hkv, hd = k_pool.shape
+    k = k_pool[page_table].reshape(b, n_pages * bs, hkv, hd)
+    v = v_pool[page_table].reshape(b, n_pages * bs, hkv, hd)
+    return decode_attention(
+        q, k, v, cur_len=cur_len, window=window, softcap_val=softcap_val,
+        scale=scale)
+
+
 # ----------------------------------------------------------------------------
 # Full multi-head attention layer (projections + rope + cache handling).
 # ----------------------------------------------------------------------------
@@ -397,6 +427,8 @@ def attention_apply(
     cache: dict[str, jax.Array] | None = None,  # decode: {"k","v"} (B,S,hkv,hd)
     cur_len: jax.Array | None = None,  # decode: scalar current position
     q_offset: int = 0,  # static chunk offset for streamed (chunked) prefill
+    page_table: jax.Array | None = None,  # paged decode: (B, n_pages) int32
+    paged_kernel: bool = False,  # paged decode via the Pallas pool kernel
 ) -> tuple[jax.Array, dict[str, jax.Array] | None]:
     """Returns (output (B,S,D), updated cache or None)."""
     b, s, d = x.shape
@@ -424,7 +456,29 @@ def attention_apply(
             k = layers.apply_rope(k, sin, cos)
 
     new_cache = cache
-    if cur_len is not None and cache is not None and kv_source is None:
+    if (cur_len is not None and cache is not None and kv_source is None
+            and page_table is not None):
+        # Paged decode: the cache leaves are the global page pool
+        # (num_blocks, block_size, hkv, hd).  Row i's K/V lands in its slot's
+        # current page (page-table indirection); free slots map to the trash
+        # block, so their padding writes never touch live pages.
+        nb, bs_pg = cache["k"].shape[0], cache["k"].shape[1]
+        bidx = jnp.arange(b)
+        page = page_table[bidx, cur_len // bs_pg]  # (B,) physical block ids
+        off = cur_len % bs_pg
+        k_pool = cache["k"].at[page, off].set(k[:, 0].astype(cache["k"].dtype))
+        v_pool = cache["v"].at[page, off].set(v[:, 0].astype(cache["v"].dtype))
+        new_cache = {"k": k_pool, "v": v_pool}
+        if paged_kernel:
+            from repro.kernels import ops as _kops
+            out = _kops.paged_attention(
+                q[:, 0], k_pool, v_pool, page_table, cur_len,
+                window=window, softcap=softcap_val, scale=scale)[:, None]
+        else:
+            out = paged_decode_attention(
+                q, k_pool, v_pool, page_table, cur_len=cur_len, window=window,
+                softcap_val=softcap_val, scale=scale)
+    elif cur_len is not None and cache is not None and kv_source is None:
         # Decode: write this step's K/V into the cache (ring-buffered if SWA).
         s_cache = cache["k"].shape[1]
         if window > 0 and s_cache == window:

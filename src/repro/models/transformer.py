@@ -263,6 +263,42 @@ def init_cache(cfg: ModelConfig, bsz: int, max_seq: int, *, enc_seq: int | None 
     return cache
 
 
+def init_paged_cache(
+    cfg: ModelConfig, bsz: int, num_blocks: int, block_size: int
+) -> Params:
+    """Paged decode caches: one global page pool per attention unit position.
+
+    Attention K/V leaves are (r, num_blocks, block_size, n_kv_heads, head_dim)
+    — a pool of fixed-size pages shared by all ``bsz`` slots and indexed
+    through a per-slot page table (see ``repro.runtime.kv_cache``).  Block 0
+    is conventionally the trash page (free slots' padding writes land there).
+    Mamba SSM/conv states are O(1) per slot and stay slot-indexed, exactly as
+    in :func:`init_cache`.
+    """
+    if cfg.is_encoder_decoder:
+        raise NotImplementedError(
+            "paged caches serve decoder-only models; cross-attention KV is "
+            "prefill-computed and has no paging to gain from")
+    r = cfg.n_repeats
+    dt = cfg.compute_dtype
+    cache: Params = {"blocks": {}}
+    for i, spec in enumerate(cfg.layer_unit):
+        c: Params = {}
+        if spec.mixer in ("attn", "attn_local"):
+            shape = (r, num_blocks, block_size, cfg.n_kv_heads, cfg.head_dim)
+            c["k"] = jnp.zeros(shape, dt)
+            c["v"] = jnp.zeros(shape, dt)
+        elif spec.mixer == "mamba":
+            d_inner, n_heads, conv_dim = mamba.mamba_dims(
+                cfg.d_model, expand=cfg.mamba_expand, headdim=cfg.mamba_headdim,
+                d_state=cfg.ssm_state)
+            c["ssm"] = jnp.zeros(
+                (r, bsz, n_heads, cfg.mamba_headdim, cfg.ssm_state), jnp.float32)
+            c["conv"] = jnp.zeros((r, bsz, mamba.CONV_WIDTH - 1, conv_dim), dt)
+        cache["blocks"][f"layer{i}"] = c
+    return cache
+
+
 # ----------------------------------------------------------------------------
 # Forward
 # ----------------------------------------------------------------------------
@@ -281,6 +317,8 @@ def _apply_layer(
     prefix_len: int,
     causal: bool,
     q_offset: int = 0,
+    page_table: jax.Array | None = None,
+    paged_kernel: bool = False,
 ) -> tuple[jax.Array, Params, jax.Array]:
     """One layer. Returns (h, new_cache, aux_loss)."""
     aux = jnp.float32(0.0)
@@ -301,7 +339,8 @@ def _apply_layer(
             rope_theta=cfg.rope_theta, causal=causal, window=window,
             prefix_len=prefix_len, softcap_val=cfg.attn_softcap,
             scale=cfg.query_scale, chunk=cfg.attn_chunk, qk_norm=cfg.qk_norm,
-            cache=kv_cache, cur_len=cur_len, q_offset=q_offset)
+            cache=kv_cache, cur_len=cur_len, q_offset=q_offset,
+            page_table=page_table, paged_kernel=paged_kernel)
         if cfg.sandwich_norm:
             out = layers.rmsnorm(p["post_mixer_norm"], out)
         h = resid + out
@@ -386,8 +425,15 @@ def forward_hidden(
     unit: tuple[LayerSpec, ...] | None = None,
     blocks: Params | None = None,
     q_offset: int = 0,
+    page_table: jax.Array | None = None,
+    paged_kernel: bool = False,
 ) -> tuple[jax.Array, Params | None, jax.Array]:
-    """Run the stacked blocks. Returns (h, new caches, aux loss)."""
+    """Run the stacked blocks. Returns (h, new caches, aux loss).
+
+    ``page_table`` switches attention layers' decode path to the paged KV
+    pool (cache leaves are then (r, num_blocks, block_size, hkv, hd)); the
+    table itself is shared by every layer, only the pools are per layer.
+    """
     unit = unit if unit is not None else cfg.layer_unit
     blocks = blocks if blocks is not None else params["blocks"]
     block_caches = caches["blocks"] if caches is not None else None
@@ -402,7 +448,8 @@ def forward_hidden(
                 cfg, spec, bp[f"layer{i}"], h,
                 positions=positions, cache=lc, cur_len=cur_len,
                 enc_out=enc_out, prefix_len=prefix_len, causal=causal,
-                q_offset=q_offset)
+                q_offset=q_offset, page_table=page_table,
+                paged_kernel=paged_kernel)
             # Pin activations to batch-sharded layout at layer boundaries so
             # the embedding table's sharding can't flip the whole stack to a
             # replicated-batch TP layout through the scan carry.
@@ -528,3 +575,75 @@ def decode_step(
     logits = h.astype(jnp.float32) @ _unembed(cfg, params).astype(jnp.float32).T
     logits = layers.softcap(logits, cfg.final_softcap)
     return logits, caches
+
+
+def decode_step_paged(
+    cfg: ModelConfig, params: Params, tokens: jax.Array, caches: Params,
+    page_table: jax.Array, cur_len: jax.Array, *, paged_kernel: bool = False,
+) -> tuple[jax.Array, Params]:
+    """One decode step against the paged KV pool (see ``init_paged_cache``).
+
+    ``page_table`` (B, n_pages) int32 maps slot b's logical page j to a
+    physical pool block; ``cur_len`` must be a (B,) vector (each slot sits at
+    its own position).  Rows beyond each slot's ``cur_len`` are masked exactly
+    as in :func:`decode_step`, so greedy outputs are token-identical to the
+    contiguous path.
+    """
+    assert jnp.ndim(cur_len) == 1, "paged decode needs per-slot positions"
+    h = meshutil.shard_batch(_embed_tokens(cfg, params, tokens))
+    h, caches, _ = forward_hidden(
+        cfg, params, h, positions=cur_len[:, None], caches=caches,
+        cur_len=cur_len, page_table=page_table, paged_kernel=paged_kernel)
+    h = layers.rmsnorm(params["final_norm"], h)
+    logits = h.astype(jnp.float32) @ _unembed(cfg, params).astype(jnp.float32).T
+    logits = layers.softcap(logits, cfg.final_softcap)
+    return logits, caches
+
+
+def sample_tokens(
+    logits: jax.Array,  # (B, V) f32
+    *,
+    temperature: float = 0.0,
+    key: jax.Array | None = None,
+) -> jax.Array:
+    """On-device sampling of the next token per row -> (B,) int32.
+
+    Greedy when ``temperature == 0``.  For temperature sampling ``key`` is
+    either one PRNG key shared by the batch (one categorical draw over the
+    batch, matching ``ServingEngine.generate``) or a (B, 2) batch of per-row
+    keys (continuous batching: each slot draws from its own key stream).
+    """
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    if key is None:
+        raise ValueError("temperature sampling needs a PRNG key")
+    scaled = logits / temperature
+    if key.ndim > 1:  # per-row keys
+        return jax.vmap(jax.random.categorical)(key, scaled).astype(jnp.int32)
+    return jax.random.categorical(key, scaled).astype(jnp.int32)
+
+
+def decode_and_sample(
+    cfg: ModelConfig, params: Params, tokens: jax.Array, caches: Params,
+    cur_len: jax.Array, *, temperature: float = 0.0,
+    key: jax.Array | None = None,
+) -> tuple[jax.Array, Params]:
+    """Decode step with sampling fused into the jitted graph: returns the
+    sampled (B,) int32 tokens and the caches — the caller transfers one int32
+    per slot per tick instead of a (B, V) logits round-trip."""
+    logits, caches = decode_step(cfg, params, tokens, caches, cur_len)
+    return sample_tokens(
+        logits[:, -1], temperature=temperature, key=key), caches
+
+
+def decode_and_sample_paged(
+    cfg: ModelConfig, params: Params, tokens: jax.Array, caches: Params,
+    page_table: jax.Array, cur_len: jax.Array, *, temperature: float = 0.0,
+    key: jax.Array | None = None, paged_kernel: bool = False,
+) -> tuple[jax.Array, Params]:
+    """Paged twin of :func:`decode_and_sample`."""
+    logits, caches = decode_step_paged(
+        cfg, params, tokens, caches, page_table, cur_len,
+        paged_kernel=paged_kernel)
+    return sample_tokens(
+        logits[:, -1], temperature=temperature, key=key), caches

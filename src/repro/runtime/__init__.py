@@ -1,3 +1,3 @@
-from repro.runtime import fault_tolerance, serving, trainer
+from repro.runtime import fault_tolerance, kv_cache, serving, trainer
 
-__all__ = ["fault_tolerance", "serving", "trainer"]
+__all__ = ["fault_tolerance", "kv_cache", "serving", "trainer"]

@@ -1,0 +1,294 @@
+"""Paged KV cache: a global page pool + free list + per-slot page tables.
+
+The paper's streaming taxonomy applied to KV memory management:
+
+  * **Pages as Independent transfer tasks (§4.1)** — the cache of one
+    request is no longer one contiguous ``max_seq`` region but a set of
+    fixed-size pages drawn from a global pool.  Pages of different requests
+    are mutually Independent: they can be allocated, scattered (prefill),
+    written (decode), gathered (evict) and reclaimed in any order, so long
+    and short requests share HBM instead of each reserving the worst case.
+  * **The page table as the RAW handoff (§4.2)** — decode step t+1 reads
+    exactly the pages that step t (and the prefill stream before it) wrote;
+    the per-slot page table is the True-dependence carrier between those
+    tasks, playing the role the chunked-prefill KV cache plays between
+    prefill chunks.
+  * **Block size as the task-granularity knob** — ML-guided tuning of
+    streamed codes (Zhang et al.) finds task/block granularity dominant;
+    ``rmetric``'s R gate + ``optimal_streams`` size it here too (see
+    ``serving.plan_decode_policy``).
+
+Layout: each attention unit position owns a K and V pool of shape
+``(r, num_blocks, block_size, n_kv_heads, head_dim)`` (``r`` = scan repeats,
+i.e. the layers axis); a single page table ``(max_batch, max_pages)`` is
+shared by every layer.  **Block 0 is the trash page**: free slots' page
+tables point at it, so the batched decode step's padding rows scatter their
+garbage K/V there and can never corrupt a live request's pages.
+
+``BlockAllocator`` is the pure host-side free-list (property-tested:
+no double allocation, full reclaim); ``PagedKVCache`` owns the device pools
+and the jitted page scatter/gather used by admission and evict/readmit.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import transformer as T
+from repro.models.transformer import ModelConfig
+
+TRASH_PAGE = 0  # physical block 0: sink for padding writes, never allocated
+
+
+class BlockAllocator:
+    """Free-list allocator over physical blocks 1..num_blocks-1.
+
+    All-or-nothing ``alloc``: either the full request is satisfied or no
+    block moves, so callers never have to roll back partial grants.
+    """
+
+    def __init__(self, num_blocks: int):
+        if num_blocks < 2:
+            raise ValueError(
+                f"need >= 2 blocks (block 0 is the trash page), got "
+                f"{num_blocks}")
+        self.num_blocks = num_blocks
+        # LIFO free list: recently-freed (still cache-warm) pages go first.
+        self._free = list(range(num_blocks - 1, 0, -1))
+        self._allocated: set[int] = set()
+
+    @property
+    def capacity(self) -> int:
+        """Usable pages (excludes the trash page)."""
+        return self.num_blocks - 1
+
+    @property
+    def free_count(self) -> int:
+        return len(self._free)
+
+    @property
+    def used_count(self) -> int:
+        return len(self._allocated)
+
+    def alloc(self, n: int) -> list[int] | None:
+        """Take ``n`` pages from the free list, or None if they don't fit."""
+        if n < 0:
+            raise ValueError(f"cannot allocate {n} pages")
+        if n > len(self._free):
+            return None
+        pages = [self._free.pop() for _ in range(n)]
+        self._allocated.update(pages)
+        return pages
+
+    def free(self, pages: list[int]) -> None:
+        """Return pages to the pool; freeing a non-allocated page is a bug."""
+        for p in pages:
+            if p not in self._allocated:
+                raise ValueError(f"double free / foreign page {p}")
+            self._allocated.remove(p)
+            self._free.append(p)
+
+
+@dataclasses.dataclass(frozen=True)
+class PoolStats:
+    """Point-in-time pool accounting (bench / autoscaling signal)."""
+
+    capacity: int  # usable pages
+    in_use: int
+    peak_in_use: int
+    page_bytes: int  # bytes of one page across all layers (K+V)
+    active_slots: int
+
+    @property
+    def utilization(self) -> float:
+        return self.in_use / self.capacity if self.capacity else 0.0
+
+    @property
+    def bytes_in_use(self) -> int:
+        return self.in_use * self.page_bytes
+
+
+class PagedKVCache:
+    """Device page pools + per-slot page tables for the batched engine.
+
+    The pools pytree mirrors ``T.init_cache``'s structure (so it threads
+    through ``forward_hidden``'s scan unchanged), but attention K/V leaves
+    are page pools shared by all slots; per-slot state (mamba SSM/conv) stays
+    slot-indexed and is scattered/gathered alongside the pages.
+    """
+
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        *,
+        max_batch: int,
+        max_seq: int,
+        block_size: int,
+        num_blocks: int | None = None,
+    ):
+        if max_seq % block_size != 0:
+            raise ValueError(
+                f"max_seq {max_seq} must be a multiple of block_size "
+                f"{block_size}")
+        self.cfg = cfg
+        self.max_batch = max_batch
+        self.max_seq = max_seq
+        self.block_size = block_size
+        self.max_pages = max_seq // block_size
+        if num_blocks is None:
+            # Parity budget with the contiguous cache: every slot can still
+            # grow to max_seq simultaneously (+ the trash page).  Smaller
+            # pools oversubscribe HBM and rely on backpressure/preemption.
+            num_blocks = max_batch * self.max_pages + 1
+        self.num_blocks = num_blocks
+        self.allocator = BlockAllocator(num_blocks)
+        self.pools = T.init_paged_cache(cfg, max_batch, num_blocks, block_size)
+        # Host-side table; pushed to device per decode tick (tiny int32s).
+        self.page_table = np.full(
+            (max_batch, self.max_pages), TRASH_PAGE, np.int32)
+        self._owned: list[list[int]] = [[] for _ in range(max_batch)]
+        self.peak_pages_in_use = 0
+        self._scatter_jit: dict[int, Any] = {}
+        self._gather_jit: dict[int, Any] = {}
+
+    # -- accounting ------------------------------------------------------------
+
+    def pages_for(self, length: int) -> int:
+        """Pages needed to hold ``length`` cache rows."""
+        return -(-length // self.block_size)
+
+    @property
+    def free_pages(self) -> int:
+        return self.allocator.free_count
+
+    @property
+    def pages_in_use(self) -> int:
+        return self.allocator.used_count
+
+    @property
+    def page_bytes(self) -> int:
+        """HBM bytes of one page across all layers (K + V)."""
+        total = 0
+        for c in self.pools["blocks"].values():
+            for key in ("k", "v"):
+                if key in c:
+                    leaf = c[key]
+                    total += leaf.size * leaf.dtype.itemsize // self.num_blocks
+        return total
+
+    def stats(self, *, active_slots: int = 0) -> PoolStats:
+        return PoolStats(
+            capacity=self.allocator.capacity, in_use=self.pages_in_use,
+            peak_in_use=self.peak_pages_in_use, page_bytes=self.page_bytes,
+            active_slots=active_slots)
+
+    def slot_pages(self, slot: int) -> list[int]:
+        return list(self._owned[slot])
+
+    # -- allocation ------------------------------------------------------------
+
+    def alloc(self, slot: int, length: int) -> bool:
+        """Grow ``slot``'s page table to cover ``length`` rows (lazy: only
+        the missing tail pages are taken).  All-or-nothing; False = the free
+        list can't satisfy it (caller applies backpressure or preempts)."""
+        need = self.pages_for(length) - len(self._owned[slot])
+        if need <= 0:
+            return True
+        pages = self.allocator.alloc(need)
+        if pages is None:
+            return False
+        start = len(self._owned[slot])
+        self._owned[slot].extend(pages)
+        self.page_table[slot, start: start + len(pages)] = pages
+        self.peak_pages_in_use = max(
+            self.peak_pages_in_use, self.pages_in_use)
+        return True
+
+    def ensure_write(self, slot: int, pos: int) -> bool:
+        """Make position ``pos`` writable for ``slot`` (the lazy page fault
+        as ``cur`` advances)."""
+        return self.alloc(slot, pos + 1)
+
+    def release(self, slot: int) -> None:
+        """Reclaim all of ``slot``'s pages and point its table at trash."""
+        if self._owned[slot]:
+            self.allocator.free(self._owned[slot])
+            self._owned[slot] = []
+        self.page_table[slot, :] = TRASH_PAGE
+
+    def device_page_table(self) -> jax.Array:
+        return jnp.asarray(self.page_table)
+
+    # -- page scatter / gather (admission, evict, readmit) ---------------------
+
+    def _make_scatter(self, n_pages: int):
+        bs = self.block_size
+
+        def fn(pools, src, pages, slot):
+            out = {"blocks": {}}
+            for name, c in pools["blocks"].items():
+                sc = src["blocks"][name]
+                oc = {}
+                for key, leaf in c.items():
+                    if key in ("k", "v"):
+                        rows = sc[key][:, 0, : n_pages * bs]
+                        r = rows.shape[0]
+                        rows = rows.reshape(
+                            r, n_pages, bs, *rows.shape[2:]).astype(leaf.dtype)
+                        oc[key] = leaf.at[:, pages].set(rows)
+                    else:  # per-slot state (mamba ssm/conv)
+                        oc[key] = jax.lax.dynamic_update_slice_in_dim(
+                            leaf, sc[key].astype(leaf.dtype), slot, axis=1)
+                out["blocks"][name] = oc
+            return out
+
+        return jax.jit(fn)
+
+    def _make_gather(self, n_pages: int):
+        bs = self.block_size
+
+        def fn(pools, pages, slot):
+            out = {"blocks": {}}
+            for name, c in pools["blocks"].items():
+                oc = {}
+                for key, leaf in c.items():
+                    if key in ("k", "v"):
+                        g = leaf[:, pages]  # (r, n, bs, hkv, hd)
+                        r = g.shape[0]
+                        oc[key] = g.reshape(
+                            r, n_pages * bs, *g.shape[3:])[:, None]
+                    else:
+                        oc[key] = jax.lax.dynamic_slice_in_dim(
+                            leaf, slot, 1, axis=1)
+                out["blocks"][name] = oc
+            return out
+
+        return jax.jit(fn)
+
+    def scatter(self, slot: int, caches: Any, length: int) -> None:
+        """Write a b=1 contiguous cache's first ``length`` rows into
+        ``slot``'s pages (admission after chunked prefill, or readmit).
+        The slot must already own ``pages_for(length)`` pages."""
+        n = self.pages_for(length)
+        assert len(self._owned[slot]) >= n, (slot, length, self._owned[slot])
+        if n not in self._scatter_jit:
+            self._scatter_jit[n] = self._make_scatter(n)
+        pages = jnp.asarray(self._owned[slot][:n], jnp.int32)
+        self.pools = self._scatter_jit[n](
+            self.pools, caches, pages, jnp.int32(slot))
+
+    def gather(self, slot: int, length: int) -> Any:
+        """Pull ``slot``'s first ``length`` rows out of the pool as a b=1
+        contiguous cache of ``pages_for(length) * block_size`` rows (evict:
+        page contents travel with the request)."""
+        n = self.pages_for(length)
+        assert len(self._owned[slot]) >= n, (slot, length, self._owned[slot])
+        if n not in self._gather_jit:
+            self._gather_jit[n] = self._make_gather(n)
+        pages = jnp.asarray(self._owned[slot][:n], jnp.int32)
+        return self._gather_jit[n](self.pools, pages, jnp.int32(slot))

@@ -39,6 +39,29 @@ Continuous-batching design (``StreamedBatchEngine``):
     whether interleaving is worthwhile and ``rmetric.optimal_streams``
     sizes the prefill chunk count; the interleave ratio is the measured
     chunk/decode time ratio.
+
+Paged KV cache (``ServeConfig.paged=True``, see ``repro.runtime.kv_cache``):
+
+  * **Pages as Independent transfer tasks (§4.1)** — each slot's cache is a
+    set of fixed-size pages drawn lazily from a global pool as ``cur``
+    advances, so allocated HBM per request tracks its actual length instead
+    of ``max_seq``; the freed headroom admits more concurrent Independent
+    tasks (the same footprint-cutting move the paper uses to overlap
+    transfers of different tasks).  The per-slot **page table is the RAW
+    handoff** between decode steps — the True-dependence carrier that the
+    chunked-prefill KV cache is between prefill chunks (§4.2).
+  * **Admission backpressure / preemption** — a prompt whose pages don't fit
+    waits in the queue; if the free list runs dry mid-decode, the youngest
+    slot is preempted (pages gathered out, exactly like ``evict``) and
+    readmitted when pages free up.  Greedy outputs stay token-identical to
+    the contiguous path, which remains the ``paged=False`` default.
+  * **Block size as a policy knob** — ``plan_decode_policy`` sizes
+    ``block_size`` from the same measured stage times that pick chunk and
+    interleave (task granularity is the dominant knob in ML-guided tuning
+    of streamed codes — Zhang et al., 1802.02760 / 2003.04294).
+  * **Fused sampling** — the jitted decode step samples on device (argmax /
+    per-slot-key categorical), so a tick transfers one int32 per slot
+    instead of a (B, vocab) logits round-trip.
 """
 
 from __future__ import annotations
@@ -55,6 +78,7 @@ import numpy as np
 from repro.core import rmetric
 from repro.models import transformer as T
 from repro.models.transformer import ModelConfig
+from repro.runtime.kv_cache import PagedKVCache
 
 
 @dataclasses.dataclass
@@ -66,6 +90,41 @@ class ServeConfig:
     # continuous batching
     max_batch: int = 4  # decode slots
     decode_interleave: int = 1  # decode steps run per in-flight prefill chunk
+    # paged KV cache
+    paged: bool = False  # page the batched KV cache (kv_cache.PagedKVCache)
+    block_size: int = 16  # cache rows per page
+    num_blocks: int | None = None  # pool size; None = contiguous-parity + trash
+    paged_kernel: bool = False  # decode via the Pallas pool kernel (TPU path)
+
+    def __post_init__(self) -> None:
+        if self.max_seq < 1:
+            raise ValueError(f"max_seq must be >= 1, got {self.max_seq}")
+        if self.prefill_chunk < 1:
+            raise ValueError(
+                f"prefill_chunk must be >= 1, got {self.prefill_chunk}")
+        if self.max_new_tokens < 1:
+            raise ValueError(
+                f"max_new_tokens must be >= 1, got {self.max_new_tokens}")
+        if self.decode_interleave < 1:
+            raise ValueError(
+                f"decode_interleave must be >= 1, got {self.decode_interleave}")
+        if self.max_batch < 1:
+            raise ValueError(f"max_batch must be >= 1, got {self.max_batch}")
+        if self.temperature < 0.0:
+            raise ValueError(
+                f"temperature must be >= 0, got {self.temperature}")
+        if self.block_size < 1:
+            raise ValueError(
+                f"block_size must be >= 1, got {self.block_size}")
+        if self.paged:
+            if self.max_seq % self.block_size != 0:
+                raise ValueError(
+                    f"max_seq {self.max_seq} must be a multiple of "
+                    f"block_size {self.block_size} (pages tile the cache)")
+            if self.num_blocks is not None and self.num_blocks < 2:
+                raise ValueError(
+                    f"num_blocks must be >= 2 (block 0 is the trash page), "
+                    f"got {self.num_blocks}")
 
 
 class ServingEngine:
@@ -73,9 +132,19 @@ class ServingEngine:
         self.cfg = cfg
         self.params = params
         self.scfg = scfg
-        self._decode_jit = jax.jit(
-            lambda p, t, c, l: T.decode_step(cfg, p, t, c, l))
+        self._sample_jit: dict[float, Any] = {}
         self._chunk_jit = {}
+
+    def _decode_sample_fn(self, temperature: float):
+        """Jitted decode step with on-device sampling fused in (one compile
+        per temperature; greedy/temp is a static branch)."""
+        temperature = float(temperature)
+        if temperature not in self._sample_jit:
+            cfg = self.cfg
+            self._sample_jit[temperature] = jax.jit(
+                lambda p, t, c, l, k: T.decode_and_sample(
+                    cfg, p, t, c, l, temperature=temperature, key=k))
+        return self._sample_jit[temperature]
 
     # -- streamed prefill -------------------------------------------------------
 
@@ -173,23 +242,29 @@ class ServingEngine:
         self, tokens: jax.Array, *, enc_inputs=None, prefix_embeds=None,
         key=None,
     ) -> jax.Array:
-        """Greedy/temperature decode after a streamed prefill."""
+        """Greedy/temperature decode after a streamed prefill.
+
+        Sampling runs on device inside the jitted decode step (fused
+        argmax/categorical), so the loop moves (B,) int32 tokens between
+        steps, never the (B, vocab) logits.
+        """
         logits, caches, pos = self.prefill_streamed(
             tokens, enc_inputs=enc_inputs, prefix_embeds=prefix_embeds)
-        b = tokens.shape[0]
-        out = []
+        temp = self.scfg.temperature
         key = key if key is not None else jax.random.PRNGKey(0)
-        for i in range(self.scfg.max_new_tokens):
-            if self.scfg.temperature > 0.0:
+        if temp > 0.0:
+            key, sub = jax.random.split(key)
+        else:
+            sub = key
+        nxt = T.sample_tokens(logits[:, -1], temperature=temp, key=sub)
+        out = [nxt[:, None]]
+        fused = self._decode_sample_fn(temp)
+        for i in range(self.scfg.max_new_tokens - 1):
+            if temp > 0.0:
                 key, sub = jax.random.split(key)
-                nxt = jax.random.categorical(
-                    sub, logits[:, -1] / self.scfg.temperature)[:, None]
-            else:
-                nxt = jnp.argmax(logits[:, -1], axis=-1)[:, None]
-            nxt = nxt.astype(jnp.int32)
-            out.append(nxt)
-            logits, caches = self._decode_jit(
-                self.params, nxt, caches, jnp.int32(pos + i))
+            nxt, caches = fused(
+                self.params, nxt[:, None], caches, jnp.int32(pos + i), sub)
+            out.append(nxt[:, None])
         return jnp.concatenate(out, axis=1)
 
 
@@ -217,6 +292,7 @@ class _Slot:
     pending: int = 0  # last sampled token (decode input)
     emitted: list[int] = dataclasses.field(default_factory=list)
     max_new: int = 0
+    seq: int = 0  # admission order (newest is preempted first)
 
     @property
     def free(self) -> bool:
@@ -232,28 +308,61 @@ class EvictedRequest:
     """A preempted request: cache rows + positions, ready to readmit."""
 
     uid: int
-    caches: Any  # (layers, 1, max_seq, ...) slice of the global cache
+    caches: Any  # (layers, 1, S, ...) b=1 cache (S = max_seq, or the gathered
+    # page span n_pages * block_size when evicted from the paged engine)
     cur: int
     pending: int
     emitted: list[int]
     max_new: int
+    n_pages: int = 0  # pages gathered (0 = contiguous eviction)
 
 
 @dataclasses.dataclass(frozen=True)
 class ServingPlan:
-    """Chunk/interleave policy from the paper's generic flow."""
+    """Chunk/interleave/page-size policy from the paper's generic flow."""
 
     decision: str  # streams.plan_streaming decision string
     prefill_chunk: int
     decode_interleave: int
     stage_times: rmetric.StageTimes
+    block_size: int = 16  # KV page granularity for the paged cache
+
+
+def plan_block_size(
+    stage_times: rmetric.StageTimes, *, prefill_chunk: int,
+    max_seq: int | None = None, min_block: int = 8, max_block: int = 128,
+) -> int:
+    """Size the KV page from the same stage measurements that size chunks.
+
+    A page is the Independent transfer task of the paged cache (its
+    allocation, prefill scatter and decode writes move page-at-a-time), so
+    the paper's depth primitive applies: split one prefill chunk's KV into
+    ``optimal_streams`` page-tasks.  When streaming isn't worthwhile (R
+    below the gate) per-page management overhead buys nothing, so pages go
+    as coarse as allowed — the same overhead-vs-overlap trade the R gate
+    arbitrates for chunks, at page granularity (the dominant knob in
+    ML-guided tuning of streamed codes: Zhang et al.).
+    """
+    decision = rmetric.streaming_decision(stage_times)
+    if decision is rmetric.StreamDecision.NOT_WORTHWHILE:
+        n_tasks = 1
+    else:
+        n_tasks = rmetric.optimal_streams(stage_times, max_streams=8)
+    target = max(min_block, prefill_chunk // max(1, n_tasks))
+    block = 1 << (int(target).bit_length() - 1)  # largest pow2 <= target
+    block = int(np.clip(block, min_block, max_block))
+    if max_seq is not None:
+        while block > min_block and max_seq % block != 0:
+            block //= 2
+    return block
 
 
 def plan_decode_policy(
     stage_times: rmetric.StageTimes, *, prompt_len: int,
-    max_interleave: int = 8, min_chunk: int = 16,
+    max_interleave: int = 8, min_chunk: int = 16, max_seq: int | None = None,
 ) -> ServingPlan:
-    """Pick (prefill_chunk, decode_interleave) from measured stage times.
+    """Pick (prefill_chunk, decode_interleave, block_size) from measured
+    stage times.
 
     ``stage_times``: h2d = one prefill chunk (the ingest stage of a new
     request), kex = one batched decode step (the steady compute stage).
@@ -262,14 +371,18 @@ def plan_decode_policy(
     whether chunked-prefill interleaving is worthwhile at all, and
     ``optimal_streams`` picks the pipeline depth (number of prefill
     chunks); the interleave ratio equalizes the two stages so neither
-    starves.
+    starves.  The KV page size rides on the same measurements
+    (``plan_block_size``).
     """
     decision = rmetric.streaming_decision(stage_times)
     if decision is rmetric.StreamDecision.NOT_WORTHWHILE:
         # Chunk cost is negligible next to decode: interleaving buys nothing,
         # prefill in one task.
-        return ServingPlan(decision.value, max(min_chunk, prompt_len), 1,
-                           stage_times)
+        chunk = max(min_chunk, prompt_len)
+        return ServingPlan(
+            decision.value, chunk, 1, stage_times,
+            plan_block_size(stage_times, prefill_chunk=chunk,
+                            max_seq=max_seq))
     if decision is rmetric.StreamDecision.STREAM:
         n_chunks = max(1, min(
             rmetric.optimal_streams(stage_times, max_streams=16),
@@ -283,7 +396,9 @@ def plan_decode_policy(
     chunk = max(min_chunk, -(-prompt_len // n_chunks))
     ratio = stage_times.h2d / max(stage_times.kex, 1e-9)
     interleave = int(np.clip(round(ratio), 1, max_interleave))
-    return ServingPlan(decision.value, chunk, interleave, stage_times)
+    return ServingPlan(
+        decision.value, chunk, interleave, stage_times,
+        plan_block_size(stage_times, prefill_chunk=chunk, max_seq=max_seq))
 
 
 class StreamedBatchEngine:
@@ -309,18 +424,58 @@ class StreamedBatchEngine:
         self.scfg = scfg
         self.single = ServingEngine(cfg, params, scfg)  # b=1 prefill machinery
         b = scfg.max_batch
-        self.caches = T.init_cache(cfg, b, scfg.max_seq, ring=False)
+        self.paged = scfg.paged
+        if self.paged:
+            self.kv = PagedKVCache(
+                cfg, max_batch=b, max_seq=scfg.max_seq,
+                block_size=scfg.block_size, num_blocks=scfg.num_blocks)
+            self.caches = None  # KV lives in self.kv.pools
+        else:
+            self.kv = None
+            self.caches = T.init_cache(cfg, b, scfg.max_seq, ring=False)
         self.slots = [_Slot(index=i) for i in range(b)]
         self.queue: collections.deque[Request] = collections.deque()
+        self._preempted: collections.deque[EvictedRequest] = (
+            collections.deque())  # page-pressure victims awaiting readmission
         self.outputs: dict[int, np.ndarray] = {}
         self._next_uid = 0
+        self._admit_seq = 0
+        self._evicted_out = 0  # outstanding evictions (pin pool geometry)
         self.decode_steps = 0  # batched decode steps run (for benchmarks)
+        self.peak_active = 0  # max concurrently-resident requests (bench)
 
-        self._decode_jit = jax.jit(
-            lambda p, t, c, l: T.decode_step(cfg, p, t, c, l))
+        # Decode step with on-device sampling fused in: a tick moves one
+        # int32 per slot to the host, never the (B, vocab) logits.  With
+        # temperature, per-slot keys are folded from (uid, step) on device.
+        temp = float(scfg.temperature)
+
+        def _keys(uids, steps):
+            return jax.vmap(lambda u, s: jax.random.fold_in(
+                jax.random.fold_in(jax.random.PRNGKey(0), u), s))(uids, steps)
+
+        if self.paged:
+            kern = scfg.paged_kernel
+            if temp > 0.0:
+                self._decode_jit = jax.jit(
+                    lambda p, t, c, pt, l, u, s: T.decode_and_sample_paged(
+                        cfg, p, t, c, pt, l, temperature=temp,
+                        key=_keys(u, s), paged_kernel=kern))
+            else:
+                self._decode_jit = jax.jit(
+                    lambda p, t, c, pt, l: T.decode_and_sample_paged(
+                        cfg, p, t, c, pt, l, paged_kernel=kern))
+        else:
+            if temp > 0.0:
+                self._decode_jit = jax.jit(
+                    lambda p, t, c, l, u, s: T.decode_and_sample(
+                        cfg, p, t, c, l, temperature=temp, key=_keys(u, s)))
+            else:
+                self._decode_jit = jax.jit(
+                    lambda p, t, c, l: T.decode_and_sample(cfg, p, t, c, l))
         # Scatter one request's (b=1) cache into slot i of the global cache /
-        # gather it back out.  Slot index is traced, so one compile serves
-        # every slot.
+        # gather it back out (contiguous path; the paged engine moves pages
+        # through self.kv instead).  Slot index is traced, so one compile
+        # serves every slot.
         self._scatter_jit = jax.jit(lambda g, l, i: jax.tree.map(
             lambda gg, ll: jax.lax.dynamic_update_slice_in_dim(
                 gg, ll.astype(gg.dtype), i, axis=1), g, l))
@@ -343,6 +498,15 @@ class StreamedBatchEngine:
             raise ValueError(
                 f"prompt {len(tokens)} + max_new {max_new} exceeds "
                 f"max_seq {self.scfg.max_seq}")
+        if self.paged:
+            # A request must be able to finish alone in the pool — the
+            # progress guarantee behind backpressure and preemption.
+            worst = self.kv.pages_for(len(tokens) + max_new)
+            if worst > self.kv.allocator.capacity:
+                raise ValueError(
+                    f"request needs {worst} pages at worst but the pool has "
+                    f"{self.kv.allocator.capacity}; grow num_blocks or "
+                    f"shrink the request")
         uid = self._next_uid
         self._next_uid += 1
         self.queue.append(Request(uid, tokens, max_new))
@@ -354,7 +518,8 @@ class StreamedBatchEngine:
 
     @property
     def pending(self) -> bool:
-        return bool(self.queue) or bool(self.active_slots)
+        return (bool(self.queue) or bool(self.active_slots)
+                or bool(self._preempted))
 
     # -- slot plumbing ---------------------------------------------------------
 
@@ -375,7 +540,12 @@ class StreamedBatchEngine:
 
     def _admit(self, req: Request, slot: _Slot) -> None:
         """Chunked prefill of ``req`` interleaved with batched decode steps,
-        then scatter its cache into ``slot``'s rows."""
+        then scatter its cache into ``slot``'s rows (contiguous) or pages
+        (paged; the pages are reserved up front so the interleaved ticks'
+        lazy allocation can never steal them)."""
+        if self.paged:
+            ok = self.kv.alloc(slot.index, len(req.tokens))
+            assert ok, "admission checked free pages before popping the queue"
         tokens = jnp.asarray(req.tokens[None], jnp.int32)
         logits = caches = None
         pos = 0
@@ -385,25 +555,61 @@ class StreamedBatchEngine:
             for _ in range(self.scfg.decode_interleave):
                 if self.active_slots:
                     self._decode_tick()
-        self.caches = self._scatter_jit(
-            self.caches, caches, jnp.int32(slot.index))
+        if self.paged:
+            self.kv.scatter(slot.index, caches, pos)
+        else:
+            self.caches = self._scatter_jit(
+                self.caches, caches, jnp.int32(slot.index))
         first = self._sample(logits[0, -1], req.uid, 0)
         slot.uid = req.uid
         slot.cur = pos
         slot.pending = first
         slot.emitted = [first]
         slot.max_new = req.max_new_tokens
+        slot.seq = self._admit_seq
+        self._admit_seq += 1
+        self.peak_active = max(self.peak_active, len(self.active_slots))
         self._reap(slot)
 
     def _reap(self, slot: _Slot) -> None:
-        """Free a finished slot and record its output."""
+        """Free a finished slot (and its pages) and record its output."""
         if slot.done:
             self.outputs[slot.uid] = np.asarray(slot.emitted, np.int32)
             slot.uid = None
             slot.emitted = []
+            if self.paged:
+                self.kv.release(slot.index)
+
+    def _preempt_for_pages(self, protect: frozenset[int]) -> bool:
+        """Evict the youngest active slot (outside ``protect``) back to the
+        preempted queue, freeing its pages.  False = nobody to preempt."""
+        victims = [s for s in self.active_slots if s.index not in protect]
+        if not victims:
+            return False
+        victim = max(victims, key=lambda s: s.seq)
+        self._preempted.append(self.evict(victim.uid))
+        return True
 
     def _decode_tick(self) -> None:
-        """One batched decode step for all slots (inactive rows are padding)."""
+        """One batched decode step for all slots (inactive rows are padding).
+
+        Sampling is fused into the jitted step: the only device-to-host
+        transfer per tick is the (B,) int32 of sampled tokens.
+        """
+        if self.paged:
+            # Lazy page fault: make each active slot's write position
+            # resident, preempting the youngest slots if the pool runs dry
+            # (oldest-first service keeps the progress guarantee).  When no
+            # other slot is left to victimize — e.g. the rest of the pool is
+            # reserved by an admission's in-flight prefill — the faulting
+            # slot preempts itself and waits for pages.
+            for s in sorted(self.active_slots, key=lambda s: s.seq):
+                if s.uid is None:
+                    continue  # preempted by an earlier iteration
+                while not self.kv.ensure_write(s.index, s.cur):
+                    if not self._preempt_for_pages(frozenset({s.index})):
+                        self._preempted.append(self.evict(s.uid))
+                        break
         act = self.active_slots
         if not act:
             return
@@ -413,40 +619,62 @@ class StreamedBatchEngine:
         for s in act:
             toks[s.index, 0] = s.pending
             cur[s.index] = s.cur
-        logits, self.caches = self._decode_jit(
-            self.params, jnp.asarray(toks), self.caches, jnp.asarray(cur))
-        self.decode_steps += 1
-        # One batched pick + one device-to-host transfer per tick (instead
-        # of a tiny kernel and a blocking sync per slot).
-        if self.scfg.temperature > 0.0:
-            keys = jnp.stack([self._slot_key(s.uid, len(s.emitted))
-                              for s in act])
-            rows = logits[jnp.asarray([s.index for s in act]), -1]
-            draws = np.asarray(jax.vmap(jax.random.categorical)(
-                keys, rows / self.scfg.temperature))
-            picks = {s.index: int(draws[j]) for j, s in enumerate(act)}
+        args = [self.params, jnp.asarray(toks)]
+        if self.paged:
+            args += [self.kv.pools, self.kv.device_page_table()]
         else:
-            greedy = np.asarray(jnp.argmax(logits[:, -1], axis=-1))
-            picks = {s.index: int(greedy[s.index]) for s in act}
+            args += [self.caches]
+        args += [jnp.asarray(cur)]
+        if self.scfg.temperature > 0.0:
+            uids = np.zeros((b,), np.int32)
+            steps = np.zeros((b,), np.int32)
+            for s in act:
+                uids[s.index] = s.uid
+                steps[s.index] = len(s.emitted)
+            args += [jnp.asarray(uids), jnp.asarray(steps)]
+        nxt, new_caches = self._decode_jit(*args)
+        if self.paged:
+            self.kv.pools = new_caches
+        else:
+            self.caches = new_caches
+        self.decode_steps += 1
+        picks = np.asarray(nxt)  # (B,) int32 — the tick's only D2H
         for s in act:
-            nxt = picks[s.index]
             s.cur += 1
-            s.pending = nxt
-            s.emitted.append(nxt)
+            s.pending = int(picks[s.index])
+            s.emitted.append(int(picks[s.index]))
             self._reap(s)
 
     # -- scheduling loop -------------------------------------------------------
 
     def step(self) -> None:
-        """One scheduling quantum: admit queued requests into free slots
-        (chunked prefill, interleaved), else run one batched decode step."""
+        """One scheduling quantum: readmit page-pressure victims, admit
+        queued requests into free slots (chunked prefill, interleaved), else
+        run one batched decode step.
+
+        Paged backpressure: a request is only popped when the free list can
+        hold its prompt; otherwise it waits (FIFO — no overtaking) and the
+        active slots keep decoding.  Progress is guaranteed because
+        ``submit`` rejects requests that can't finish alone in the pool.
+        """
+        progressed = False
+        if self.paged:
+            while (self._preempted
+                   and any(s.free for s in self.slots)
+                   and self.kv.pages_for(self._preempted[0].cur)
+                   <= self.kv.free_pages):
+                self.readmit(self._preempted.popleft())
+                progressed = True
         free = [s for s in self.slots if s.free]
-        if self.queue and free:
-            burst = [self.queue.popleft()
-                     for _ in range(min(len(free), len(self.queue)))]
-            for req, slot in zip(burst, free):
-                self._admit(req, slot)
-        else:
+        while self.queue and free:
+            req = self.queue[0]
+            if (self.paged and self.kv.pages_for(len(req.tokens))
+                    > self.kv.free_pages):
+                break  # backpressure: wait for pages, keep decoding
+            self.queue.popleft()
+            self._admit(req, free.pop(0))
+            progressed = True
+        if not progressed:
             self._decode_tick()
 
     def run(self) -> dict[int, np.ndarray]:
@@ -461,17 +689,30 @@ class StreamedBatchEngine:
     # -- eviction / readmission ------------------------------------------------
 
     def evict(self, uid: int) -> EvictedRequest:
-        """Pull a request out of its slot (cache rows + positions)."""
+        """Pull a request out of its slot (cache rows + positions).
+
+        Paged: the slot's pages are gathered into a b=1 contiguous snapshot
+        (page contents travel with the request) and returned to the free
+        list — eviction is how page pressure is relieved.
+        """
         slot = next((s for s in self.slots if s.uid == uid), None)
         if slot is None:
             raise KeyError(f"uid {uid} not active")
+        if self.paged:
+            caches = self.kv.gather(slot.index, slot.cur)
+            n_pages = self.kv.pages_for(slot.cur)
+            self.kv.release(slot.index)
+        else:
+            caches = self._gather_jit(self.caches, jnp.int32(slot.index))
+            n_pages = 0
         ev = EvictedRequest(
-            uid=uid,
-            caches=self._gather_jit(self.caches, jnp.int32(slot.index)),
+            uid=uid, caches=caches,
             cur=slot.cur, pending=slot.pending,
-            emitted=list(slot.emitted), max_new=slot.max_new)
+            emitted=list(slot.emitted), max_new=slot.max_new,
+            n_pages=n_pages)
         slot.uid = None
         slot.emitted = []
+        self._evicted_out += 1
         return ev
 
     def readmit(self, ev: EvictedRequest) -> int:
@@ -480,20 +721,37 @@ class StreamedBatchEngine:
         slot = next((s for s in self.slots if s.free), None)
         if slot is None:
             raise RuntimeError("no free slot to readmit into")
-        self.caches = self._scatter_jit(
-            self.caches, ev.caches, jnp.int32(slot.index))
+        if self.paged:
+            if not self.kv.alloc(slot.index, ev.cur):
+                raise RuntimeError(
+                    f"not enough free pages to readmit uid {ev.uid} "
+                    f"(need {self.kv.pages_for(ev.cur)}, "
+                    f"free {self.kv.free_pages})")
+            self.kv.scatter(slot.index, ev.caches, ev.cur)
+        else:
+            self.caches = self._scatter_jit(
+                self.caches, ev.caches, jnp.int32(slot.index))
         slot.uid = ev.uid
         slot.cur = ev.cur
         slot.pending = ev.pending
         slot.emitted = list(ev.emitted)
         slot.max_new = ev.max_new
+        slot.seq = self._admit_seq
+        self._admit_seq += 1
+        self._evicted_out -= 1
+        self.peak_active = max(self.peak_active, len(self.active_slots))
         return slot.index
 
     # -- policy ----------------------------------------------------------------
 
     def measure_stage_times(self, prompt_len: int) -> rmetric.StageTimes:
         """Time one prefill chunk and one batched decode step (both warmed)
-        on synthetic data; the paper's stage-by-stage methodology (§3.3)."""
+        on synthetic data; the paper's stage-by-stage methodology (§3.3).
+
+        The functional decode step is timed and its result discarded, so the
+        probe never mutates live caches (the padding rows' trash writes stay
+        in the discarded copy).
+        """
         chunk = min(self.scfg.prefill_chunk, prompt_len)
         toks = jnp.zeros((1, chunk), jnp.int32)
         caches = T.init_cache(self.cfg, 1, self.scfg.max_seq, ring=False)
@@ -506,18 +764,46 @@ class StreamedBatchEngine:
         b = self.scfg.max_batch
         dt = jnp.zeros((b, 1), jnp.int32)
         dl = jnp.zeros((b,), jnp.int32)
-        out = self._decode_jit(self.params, dt, self.caches, dl)
+        args = [self.params, dt]
+        if self.paged:
+            args += [self.kv.pools, self.kv.device_page_table()]
+        else:
+            args += [self.caches]
+        args += [dl]
+        if self.scfg.temperature > 0.0:
+            args += [jnp.zeros((b,), jnp.int32), jnp.zeros((b,), jnp.int32)]
+        out = self._decode_jit(*args)
         jax.block_until_ready(out[0])
         t0 = time.perf_counter()
-        logits, _ = self._decode_jit(self.params, dt, self.caches, dl)
-        jax.block_until_ready(logits)
+        nxt, _ = self._decode_jit(*args)
+        jax.block_until_ready(nxt)
         t_decode = time.perf_counter() - t0
         return rmetric.StageTimes(h2d=t_chunk, kex=t_decode)
 
     def autotune(self, prompt_len: int) -> ServingPlan:
-        """Measure stage times and apply the planned chunk/interleave."""
+        """Measure stage times and apply the planned chunk/interleave (and,
+        when the paged pool is idle, rebuild it at the planned block size —
+        pages in flight *or* outstanding evicted snapshots, whose gathered
+        row counts are multiples of the old block size, pin the geometry)."""
         plan = plan_decode_policy(
-            self.measure_stage_times(prompt_len), prompt_len=prompt_len)
+            self.measure_stage_times(prompt_len), prompt_len=prompt_len,
+            max_seq=self.scfg.max_seq)
         self.scfg.prefill_chunk = plan.prefill_chunk
         self.scfg.decode_interleave = plan.decode_interleave
+        if (self.paged and plan.block_size != self.scfg.block_size
+                and self.kv.pages_in_use == 0
+                and self._evicted_out == 0
+                and not self.queue  # queued requests were validated against
+                # the current pool's row capacity
+                and self.scfg.max_seq % plan.block_size == 0):
+            if self.scfg.num_blocks is not None:
+                # Preserve the explicit pool's row budget at the new page
+                # granularity (+ the trash page).
+                rows = self.kv.allocator.capacity * self.kv.block_size
+                self.scfg.num_blocks = rows // plan.block_size + 1
+            self.scfg.block_size = plan.block_size
+            self.kv = PagedKVCache(
+                self.cfg, max_batch=self.scfg.max_batch,
+                max_seq=self.scfg.max_seq, block_size=plan.block_size,
+                num_blocks=self.scfg.num_blocks)
         return plan

@@ -1,0 +1,294 @@
+"""Paged KV-cache subsystem: allocator properties, paged-vs-contiguous
+greedy parity, lazy page allocation, free-list backpressure/preemption and
+evict/readmit page-content preservation."""
+
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+import repro.configs as C
+from repro.models import transformer as T
+from repro.runtime.kv_cache import BlockAllocator, PagedKVCache
+from repro.runtime.serving import (ServeConfig, ServingEngine,
+                                   StreamedBatchEngine)
+
+
+@pytest.fixture(scope="module")
+def served():
+    cfg = C.get_smoke_config("qwen3-4b")
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _prompts(cfg, lens, seed=1):
+    return [np.asarray(jax.random.randint(
+        jax.random.PRNGKey(seed + i), (n,), 0, cfg.vocab_size))
+        for i, n in enumerate(lens)]
+
+
+def _paired_cfgs(**kw):
+    base = dict(max_seq=96, prefill_chunk=16, max_new_tokens=6, max_batch=3,
+                block_size=16)
+    base.update(kw)
+    return ServeConfig(**base), ServeConfig(**base, paged=True)
+
+
+class TestBlockAllocator:
+    """Property tests: no double allocation, full reclaim, trash reserved."""
+
+    @given(seed=st.integers(0, 10**9))
+    @settings(max_examples=30, deadline=None)
+    def test_random_alloc_free_invariants(self, seed):
+        rng = np.random.default_rng(seed)
+        alloc = BlockAllocator(int(rng.integers(2, 24)))
+        held: list[list[int]] = []
+        seen_total = set()
+        for _ in range(200):
+            if held and rng.random() < 0.4:
+                alloc.free(held.pop(int(rng.integers(len(held)))))
+            else:
+                n = int(rng.integers(0, alloc.capacity + 2))
+                pages = alloc.alloc(n)
+                if n > alloc.free_count + (len(pages) if pages else 0):
+                    assert pages is None  # all-or-nothing refusal
+                if pages is None:
+                    continue
+                assert len(pages) == n
+                assert 0 not in pages  # trash page never granted
+                flat = {p for grant in held for p in grant}
+                assert not flat & set(pages)  # no double allocation
+                held.append(pages)
+                seen_total.update(pages)
+            in_use = sum(len(g) for g in held)
+            assert alloc.used_count == in_use
+            assert alloc.free_count == alloc.capacity - in_use
+        for grant in held:
+            alloc.free(grant)
+        assert alloc.free_count == alloc.capacity  # full reclaim
+        assert alloc.used_count == 0
+        assert seen_total <= set(range(1, alloc.num_blocks))
+
+    def test_double_free_rejected(self):
+        alloc = BlockAllocator(4)
+        pages = alloc.alloc(2)
+        alloc.free(pages)
+        with pytest.raises(ValueError):
+            alloc.free(pages)
+
+    def test_trash_pool_too_small(self):
+        with pytest.raises(ValueError):
+            BlockAllocator(1)
+
+
+class TestServeConfigValidation:
+    def test_rejects_bad_fields(self):
+        with pytest.raises(ValueError):
+            ServeConfig(prefill_chunk=0)
+        with pytest.raises(ValueError):
+            ServeConfig(decode_interleave=0)
+        with pytest.raises(ValueError):
+            ServeConfig(max_new_tokens=0)
+        with pytest.raises(ValueError):
+            ServeConfig(max_batch=0)
+        with pytest.raises(ValueError):
+            ServeConfig(temperature=-0.1)
+        with pytest.raises(ValueError):
+            ServeConfig(block_size=0)
+
+    def test_paged_geometry_checks(self):
+        with pytest.raises(ValueError):  # pages must tile the cache
+            ServeConfig(max_seq=100, block_size=16, paged=True)
+        with pytest.raises(ValueError):  # block 0 is the trash page
+            ServeConfig(max_seq=64, block_size=16, paged=True, num_blocks=1)
+        ServeConfig(max_seq=100, block_size=16)  # contiguous: no constraint
+
+    def test_pool_geometry_validated(self, served):
+        cfg, _ = served
+        with pytest.raises(ValueError):
+            PagedKVCache(cfg, max_batch=2, max_seq=70, block_size=16)
+
+
+class TestPagedParity:
+    def test_greedy_token_identical_mixed_lengths(self, served):
+        """The acceptance bar: paged greedy output == contiguous greedy
+        output across mixed prompt lengths, while peak page use tracks the
+        actual sequence lengths, not max_batch * max_seq."""
+        cfg, params = served
+        scfg, pscfg = _paired_cfgs()
+        prompts = _prompts(cfg, [24, 32, 40, 16, 48])
+
+        single = ServingEngine(cfg, params, scfg)
+        want = [np.asarray(single.generate(p[None])[0]) for p in prompts]
+
+        eng = StreamedBatchEngine(cfg, params, pscfg)
+        uids = [eng.submit(p) for p in prompts]
+        got = eng.run()
+        for uid, ref in zip(uids, want):
+            np.testing.assert_array_equal(got[uid], ref)
+        # Lazy paging: the contiguous pool pins max_batch * max_seq rows
+        # (18 pages here); the longest resident set of 3 requests needs
+        # far fewer pages than that.
+        assert eng.kv.peak_pages_in_use < eng.kv.allocator.capacity
+        assert eng.kv.pages_in_use == 0  # full reclaim after drain
+
+    def test_allocated_hbm_tracks_actual_length(self, served):
+        """A short request's KV HBM is pages_for(len), not max_seq."""
+        cfg, params = served
+        _, pscfg = _paired_cfgs(max_seq=96, max_new_tokens=4, max_batch=2)
+        eng = StreamedBatchEngine(cfg, params, pscfg)
+        eng.submit(_prompts(cfg, [8], seed=7)[0])
+        eng.run()
+        # 8 prompt + 4 new = 12 rows -> one 16-row page, vs 6 pages had the
+        # slot reserved max_seq contiguously.
+        assert eng.kv.peak_pages_in_use == 1
+        st_ = eng.kv.stats()
+        assert st_.page_bytes > 0 and st_.in_use == 0
+
+    def test_temperature_parity_with_contiguous(self, served):
+        """Per-slot (uid, step) sampling keys make temperature draws
+        independent of cache layout: paged == contiguous."""
+        cfg, params = served
+        scfg, pscfg = _paired_cfgs(max_new_tokens=5, temperature=0.8)
+        prompts = _prompts(cfg, [24, 32], seed=21)
+        e1 = StreamedBatchEngine(cfg, params, scfg)
+        e2 = StreamedBatchEngine(cfg, params, pscfg)
+        u1 = [e1.submit(p) for p in prompts]
+        u2 = [e2.submit(p) for p in prompts]
+        r1, r2 = e1.run(), e2.run()
+        for a, b in zip(u1, u2):
+            np.testing.assert_array_equal(r1[a], r2[b])
+
+    @pytest.mark.slow
+    def test_paged_kernel_engine_parity(self, served):
+        """End-to-end decode through the Pallas pool kernel (interpret on
+        CPU) stays token-identical to the single-request engine."""
+        cfg, params = served
+        p = _prompts(cfg, [20], seed=31)[0]
+        want = np.asarray(ServingEngine(cfg, params, ServeConfig(
+            max_seq=32, prefill_chunk=16, max_new_tokens=3)).generate(
+                p[None])[0])
+        eng = StreamedBatchEngine(cfg, params, ServeConfig(
+            max_seq=32, prefill_chunk=16, max_new_tokens=3, max_batch=2,
+            paged=True, block_size=8, paged_kernel=True))
+        uid = eng.submit(p)
+        np.testing.assert_array_equal(eng.run()[uid], want)
+
+    @pytest.mark.slow
+    @pytest.mark.parametrize("arch", ["gemma2-27b", "jamba-1.5-large-398b"])
+    def test_paged_parity_other_archs(self, arch):
+        """Sliding-window + softcap (gemma2) and hybrid attention/mamba
+        (jamba: per-slot SSM state rides alongside the paged KV)."""
+        cfg = C.get_smoke_config(arch)
+        params = T.init_params(cfg, jax.random.PRNGKey(0))
+        scfg, pscfg = _paired_cfgs(max_seq=64, max_new_tokens=4, max_batch=2)
+        prompts = _prompts(cfg, [24, 40], seed=13)
+        single = ServingEngine(cfg, params, scfg)
+        want = [np.asarray(single.generate(p[None])[0]) for p in prompts]
+        eng = StreamedBatchEngine(cfg, params, pscfg)
+        uids = [eng.submit(p) for p in prompts]
+        got = eng.run()
+        for uid, ref in zip(uids, want):
+            np.testing.assert_array_equal(got[uid], ref)
+
+
+class TestBackpressure:
+    def test_free_list_exhaustion_queues_requests(self, served):
+        """A pool smaller than the offered load forces queue backpressure
+        (and possibly preemption); every request still finishes with
+        token-identical output and the pool never over-allocates."""
+        cfg, params = served
+        scfg = ServeConfig(max_seq=64, prefill_chunk=16, max_new_tokens=8,
+                           max_batch=3)
+        prompts = _prompts(cfg, [32, 32, 32], seed=11)
+        single = ServingEngine(cfg, params, scfg)
+        want = [np.asarray(single.generate(p[None])[0]) for p in prompts]
+
+        # 4 usable pages; each request peaks at 3 -> at most one fully
+        # resident request plus a partial second.
+        pscfg = ServeConfig(max_seq=64, prefill_chunk=16, max_new_tokens=8,
+                            max_batch=3, paged=True, block_size=16,
+                            num_blocks=5)
+        eng = StreamedBatchEngine(cfg, params, pscfg)
+        uids = [eng.submit(p) for p in prompts]
+        got = eng.run()
+        for uid, ref in zip(uids, want):
+            np.testing.assert_array_equal(got[uid], ref)
+        assert eng.kv.peak_pages_in_use <= eng.kv.allocator.capacity
+        assert eng.peak_active < len(prompts)  # the pool throttled admission
+        assert eng.kv.pages_in_use == 0
+
+    def test_request_larger_than_pool_rejected(self, served):
+        cfg, params = served
+        eng = StreamedBatchEngine(cfg, params, ServeConfig(
+            max_seq=64, prefill_chunk=16, max_new_tokens=8, max_batch=2,
+            paged=True, block_size=16, num_blocks=4))
+        with pytest.raises(ValueError):  # needs 4 pages, pool holds 3
+            eng.submit(np.zeros(56, np.int32), max_new_tokens=8)
+
+
+class TestEvictReadmit:
+    def test_pages_travel_with_the_request(self, served):
+        """Evict mid-decode gathers page contents; readmission into a
+        different slot reallocates pages and continues token-identically."""
+        cfg, params = served
+        scfg, pscfg = _paired_cfgs(max_seq=64, max_new_tokens=8, max_batch=2)
+        p0, p1 = _prompts(cfg, [24, 32], seed=3)
+        single = ServingEngine(cfg, params, scfg)
+        ref = np.asarray(single.generate(p0[None])[0])
+
+        eng = StreamedBatchEngine(cfg, params, pscfg)
+        u0 = eng.submit(p0)
+        eng.step()  # admit
+        for _ in range(3):
+            eng.step()  # partial decode
+        before = eng.kv.pages_in_use
+        ev = eng.evict(u0)
+        assert ev.cur == len(p0) + len(ev.emitted) - 1  # positions travel
+        assert ev.n_pages == eng.kv.pages_for(ev.cur)
+        assert eng.kv.pages_in_use < before  # pages reclaimed on evict
+        u1 = eng.submit(p1)
+        eng.step()  # freed pages are reused by p1
+        for _ in range(2):
+            eng.step()
+        new_slot = eng.readmit(ev)
+        assert eng.slots[new_slot].uid == u0
+        assert eng.slots[new_slot].cur == ev.cur
+        out = eng.run()
+        np.testing.assert_array_equal(out[u0], ref)
+        assert u1 in out
+        assert eng.kv.pages_in_use == 0
+
+    def test_outstanding_eviction_pins_pool_geometry(self, served):
+        """An evicted snapshot's rows are multiples of the old block size;
+        autotune must not rebuild the pool while one is outstanding."""
+        cfg, params = served
+        eng = StreamedBatchEngine(cfg, params, ServeConfig(
+            max_seq=64, prefill_chunk=16, max_new_tokens=4, max_batch=2,
+            paged=True, block_size=8))
+        p0 = _prompts(cfg, [20], seed=23)[0]
+        u0 = eng.submit(p0)
+        eng.step()  # admit
+        ev = eng.evict(u0)  # pool now idle, but the snapshot is out
+        eng.autotune(32)
+        assert eng.kv.block_size == 8  # geometry pinned by the eviction
+        eng.readmit(ev)  # must still scatter cleanly
+        out = eng.run()
+        assert u0 in out
+
+    def test_readmit_without_pages_raises(self, served):
+        cfg, params = served
+        eng = StreamedBatchEngine(cfg, params, ServeConfig(
+            max_seq=64, prefill_chunk=16, max_new_tokens=8, max_batch=2,
+            paged=True, block_size=16, num_blocks=4))
+        p0, p1 = _prompts(cfg, [32, 40], seed=17)
+        u0 = eng.submit(p0)
+        eng.step()  # admit p0 (2 pages)
+        ev = eng.evict(u0)  # all 3 pages free again
+        eng.submit(p1, max_new_tokens=8)
+        eng.step()  # admit p1: its prompt takes all 3 pages
+        eng.step()  # one decode tick (stays within page 3)
+        assert eng.kv.free_pages < eng.kv.pages_for(ev.cur)
+        with pytest.raises(RuntimeError):
+            eng.readmit(ev)

@@ -117,6 +117,8 @@ class TestPolicy:
         assert plan.decision == "stream"
         assert 16 <= plan.prefill_chunk <= 256
         assert plan.decode_interleave == 2  # chunk time ~ 2 decode steps
+        # streaming worthwhile -> pages split the chunk into depth tasks
+        assert plan.block_size == 8
 
     def test_not_worthwhile_falls_back_to_oneshot(self):
         t = rmetric.StageTimes(h2d=0.0001, kex=0.1)  # R below the gate
@@ -124,6 +126,8 @@ class TestPolicy:
         assert plan.decision == "not-worthwhile"
         assert plan.prefill_chunk == 256  # one task: no interleaving
         assert plan.decode_interleave == 1
+        # per-page management overhead buys nothing: coarsest page allowed
+        assert plan.block_size == 128
 
     def test_chunk_dominated_regime_chunks_finely(self):
         """R above the paper's band = a prefill chunk dwarfs a decode step:
@@ -134,6 +138,13 @@ class TestPolicy:
         assert plan.decision == "offload-unprofitable"
         assert plan.prefill_chunk == 16  # min_chunk: finest allowed
         assert plan.decode_interleave == 8  # capped at max_interleave
+        assert plan.block_size == 8  # fine chunks -> fine pages
+
+    def test_block_size_snaps_to_max_seq_divisor(self):
+        t = rmetric.StageTimes(h2d=0.0001, kex=0.1)
+        plan = plan_decode_policy(t, prompt_len=256, max_seq=96)
+        assert plan.block_size == 32  # 128 -> halved until it tiles 96
+        assert 96 % plan.block_size == 0
 
     def test_autotune_applies_plan(self, served):
         cfg, params = served
