@@ -1,0 +1,15 @@
+# Test entry points.  Tier-1 is the gate every PR must keep green; the slow
+# tier covers the heavy end-to-end paths, including the prefix-sharing
+# serving bench smoke (tests/test_serving.py -m slow).
+PYTHONPATH := src
+
+.PHONY: test test-slow bench
+
+test:  ## tier-1 gate (pytest.ini already excludes -m slow)
+	PYTHONPATH=$(PYTHONPATH) python -m pytest -x -q -m "not slow"
+
+test-slow:  ## heavy end-to-end paths + the sharing bench smoke
+	PYTHONPATH=$(PYTHONPATH) python -m pytest -q -m slow
+
+bench:  ## paper-figure benchmarks (CSV to stdout)
+	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.run

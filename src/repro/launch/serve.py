@@ -45,7 +45,14 @@ def main() -> None:
                     help="cache rows per KV page (paged mode)")
     ap.add_argument("--num-blocks", type=int, default=None,
                     help="page-pool size; default = contiguous-parity")
+    ap.add_argument("--prefix-sharing", action="store_true",
+                    help="map common page-aligned prompt prefixes to the "
+                         "same physical pages (copy-on-write; needs --paged)")
+    ap.add_argument("--prefix-min-pages", type=int, default=1,
+                    help="shortest prefix worth sharing, in pages")
     args = ap.parse_args()
+    if args.prefix_sharing and not args.paged:
+        ap.error("--prefix-sharing requires --paged")
 
     cfg = configs.get_smoke_config(args.arch)
     params = T.init_params(cfg, jax.random.PRNGKey(0))
@@ -61,11 +68,21 @@ def main() -> None:
         decode_interleave=args.interleave,
         paged=args.paged,
         block_size=args.block_size,
-        num_blocks=args.num_blocks)
+        num_blocks=args.num_blocks,
+        prefix_sharing=args.prefix_sharing,
+        prefix_min_pages=args.prefix_min_pages)
 
     b = args.requests
     tokens = jax.random.randint(
         jax.random.PRNGKey(1), (b, args.prompt_len), 0, cfg.vocab_size)
+    if args.prefix_sharing:
+        # shared-system-prompt workload: the first (page-aligned) half of
+        # every prompt is the same SYNC prefix, the tails stay unique
+        sys_len = max(args.block_size, (args.prompt_len // 2)
+                      // args.block_size * args.block_size)
+        sys_tok = jax.random.randint(
+            jax.random.PRNGKey(4), (sys_len,), 0, cfg.vocab_size)
+        tokens = tokens.at[:, :sys_len].set(sys_tok[None])
 
     batched = not (cfg.is_encoder_decoder or cfg.prefix_len or args.sequential)
     if not batched:
@@ -105,6 +122,12 @@ def main() -> None:
             mode += (f", paged block={eng.kv.block_size} "
                      f"(peak {st.peak_in_use}/{st.capacity} pages, "
                      f"{st.page_bytes}B/page)")
+            if args.prefix_sharing:
+                mode += (f", prefix-sharing {eng.prefix_hits} hits / "
+                         f"{eng.prefix_pages_shared} pages mapped "
+                         f"({eng.prefix_pages_shared * st.page_bytes}B of "
+                         f"prefill copies avoided, "
+                         f"{eng.kv.cow_forks} COW forks)")
 
     print(f"[serve] {args.arch} ({mode}): {b} requests x {args.prompt_len} "
           f"prompt -> {total_new // b} new tokens each in {dt:.2f}s "

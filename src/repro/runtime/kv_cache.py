@@ -13,6 +13,16 @@ The paper's streaming taxonomy applied to KV memory management:
     the per-slot page table is the True-dependence carrier between those
     tasks, playing the role the chunked-prefill KV cache plays between
     prefill chunks.
+  * **Prefix pages as the SYNC transfer (§4.1)** — data shared by *every*
+    task that must be staged once before streaming begins is the paper's
+    SYNC type; the serving analog is a common prompt prefix (a shared
+    system prompt).  ``PrefixRegistry`` maps a page-aligned prefix token
+    hash to its physical blocks, so N requests with the same prefix map the
+    same pages into their tables at refcount+1 instead of prefilling and
+    storing N copies: the SYNC data is staged once, and only the uncovered
+    tail streams.  Blocks free on refcount-zero; a write to a shared block
+    forks it first (copy-on-write), so a writer's divergence is invisible
+    to the other sharers.
   * **Block size as the task-granularity knob** — ML-guided tuning of
     streamed codes (Zhang et al.) finds task/block granularity dominant;
     ``rmetric``'s R gate + ``optimal_streams`` size it here too (see
@@ -25,14 +35,17 @@ shared by every layer.  **Block 0 is the trash page**: free slots' page
 tables point at it, so the batched decode step's padding rows scatter their
 garbage K/V there and can never corrupt a live request's pages.
 
-``BlockAllocator`` is the pure host-side free-list (property-tested:
-no double allocation, full reclaim); ``PagedKVCache`` owns the device pools
-and the jitted page scatter/gather used by admission and evict/readmit.
+``BlockAllocator`` is the pure host-side refcounted free-list
+(property-tested: no double allocation, no free while referenced, full
+reclaim); ``PagedKVCache`` owns the device pools and the jitted page
+scatter/gather/copy used by admission, evict/readmit and COW forks.
 """
 
 from __future__ import annotations
 
+import collections
 import dataclasses
+import hashlib
 from typing import Any
 
 import jax
@@ -44,12 +57,34 @@ from repro.models.transformer import ModelConfig
 
 TRASH_PAGE = 0  # physical block 0: sink for padding writes, never allocated
 
+# Per-shape jitted scatter/gather/load helpers are cached by page count; an
+# unbounded dict would grow one compile per distinct prefix/evict size over a
+# long-lived server, so the caches are small LRUs instead.
+_JIT_CACHE_CAP = 16
+
+
+def _lru_jit(cache: "collections.OrderedDict", key, make, *,
+             cap: int = _JIT_CACHE_CAP):
+    """Fetch-or-build a jitted helper in a small LRU compile cache."""
+    fn = cache.get(key)
+    if fn is None:
+        fn = make()
+        cache[key] = fn
+        if len(cache) > cap:
+            cache.popitem(last=False)
+    else:
+        cache.move_to_end(key)
+    return fn
+
 
 class BlockAllocator:
-    """Free-list allocator over physical blocks 1..num_blocks-1.
+    """Refcounted free-list allocator over physical blocks 1..num_blocks-1.
 
     All-or-nothing ``alloc``: either the full request is satisfied or no
-    block moves, so callers never have to roll back partial grants.
+    block moves, so callers never have to roll back partial grants.  Blocks
+    come out of ``alloc`` at refcount 1; sharers take extra references with
+    ``incref`` and every ``free`` drops one reference — the block returns to
+    the free list only at refcount zero.
     """
 
     def __init__(self, num_blocks: int):
@@ -60,7 +95,7 @@ class BlockAllocator:
         self.num_blocks = num_blocks
         # LIFO free list: recently-freed (still cache-warm) pages go first.
         self._free = list(range(num_blocks - 1, 0, -1))
-        self._allocated: set[int] = set()
+        self._ref: dict[int, int] = {}  # block -> live reference count
 
     @property
     def capacity(self) -> int:
@@ -73,7 +108,21 @@ class BlockAllocator:
 
     @property
     def used_count(self) -> int:
-        return len(self._allocated)
+        """Physical blocks held (shared blocks count once)."""
+        return len(self._ref)
+
+    @property
+    def shared_count(self) -> int:
+        """Physical blocks referenced by more than one holder."""
+        return sum(1 for r in self._ref.values() if r > 1)
+
+    @property
+    def total_refs(self) -> int:
+        """Logical references; ``total_refs - used_count`` copies avoided."""
+        return sum(self._ref.values())
+
+    def refcount(self, page: int) -> int:
+        return self._ref.get(page, 0)
 
     def alloc(self, n: int) -> list[int] | None:
         """Take ``n`` pages from the free list, or None if they don't fit."""
@@ -82,16 +131,126 @@ class BlockAllocator:
         if n > len(self._free):
             return None
         pages = [self._free.pop() for _ in range(n)]
-        self._allocated.update(pages)
+        for p in pages:
+            self._ref[p] = 1
         return pages
 
-    def free(self, pages: list[int]) -> None:
-        """Return pages to the pool; freeing a non-allocated page is a bug."""
+    def incref(self, pages: list[int]) -> None:
+        """Add one reference per page (sharing an allocated block)."""
         for p in pages:
-            if p not in self._allocated:
+            if p not in self._ref:
+                raise ValueError(f"cannot share unallocated page {p}")
+        for p in pages:
+            self._ref[p] += 1
+
+    def free(self, pages: list[int]) -> None:
+        """Drop one reference per page; a block is reclaimed only when its
+        last reference goes (freeing a non-allocated page is a bug)."""
+        for p in pages:
+            if p not in self._ref:
                 raise ValueError(f"double free / foreign page {p}")
-            self._allocated.remove(p)
-            self._free.append(p)
+        for p in pages:
+            if self._ref[p] == 1:
+                del self._ref[p]
+                self._free.append(p)
+            else:
+                self._ref[p] -= 1
+
+
+class PrefixRegistry:
+    """Host-side LRU map: page-aligned prompt-prefix tokens -> block list.
+
+    The lookup key is a digest of the raw token bytes (the stored bytes are
+    compared on hit, so a digest collision can never alias two prefixes).
+    Entries of one prompt nest (lengths 1..n pages share blocks), so the
+    registry tracks per-block usage across entries and holds exactly **one**
+    allocator reference per distinct block: ``put``/``pop_lru``/``clear``
+    return the blocks whose registry-wide usage crossed zero, for the caller
+    to ``incref``/``free`` — this keeps ``total_refs`` an honest count of
+    copies avoided.
+    """
+
+    def __init__(self, max_entries: int = 1024):
+        self.max_entries = max_entries
+        # digest -> (token bytes, blocks)
+        self._entries: collections.OrderedDict[
+            bytes, tuple[bytes, list[int]]] = collections.OrderedDict()
+        self._block_use: collections.Counter = collections.Counter()
+        self.hits = 0
+        self.misses = 0
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    @property
+    def blocks_held(self) -> int:
+        """Distinct blocks the registry holds a retention reference on."""
+        return len(self._block_use)
+
+    @staticmethod
+    def _digest(token_bytes: bytes) -> bytes:
+        return hashlib.sha1(token_bytes).digest()
+
+    def _retain(self, blocks: list[int]) -> list[int]:
+        """Track entry blocks; returns those newly referenced (0 -> 1)."""
+        fresh = [b for b in blocks if self._block_use[b] == 0]
+        self._block_use.update(blocks)
+        return fresh
+
+    def _release(self, blocks: list[int]) -> list[int]:
+        """Untrack entry blocks; returns those no longer referenced."""
+        gone = []
+        for b in blocks:
+            self._block_use[b] -= 1
+            if self._block_use[b] == 0:
+                del self._block_use[b]
+                gone.append(b)
+        return gone
+
+    def get(self, tokens: np.ndarray) -> list[int] | None:
+        tb = np.ascontiguousarray(tokens).tobytes()
+        d = self._digest(tb)
+        entry = self._entries.get(d)
+        if entry is None or entry[0] != tb:
+            self.misses += 1
+            return None
+        self._entries.move_to_end(d)
+        self.hits += 1
+        return list(entry[1])
+
+    def put(
+        self, tokens: np.ndarray, blocks: list[int]
+    ) -> tuple[list[int], list[int]]:
+        """Insert.  Returns (blocks to incref, blocks to free) — the
+        registry-wide reference transitions this insert caused (including
+        any LRU overflow / digest-collision drops)."""
+        tb = np.ascontiguousarray(tokens).tobytes()
+        d = self._digest(tb)
+        released: list[int] = []
+        if d in self._entries:
+            if self._entries[d][0] == tb:
+                self._entries.move_to_end(d)
+                return [], []
+            released += self._release(self._entries.pop(d)[1])  # collision
+        self._entries[d] = (tb, list(blocks))
+        retained = self._retain(blocks)
+        while len(self._entries) > self.max_entries:
+            released += self._release(self._entries.popitem(last=False)[1][1])
+        return retained, released
+
+    def pop_lru(self) -> list[int] | None:
+        """Drop the least-recently-used entry; returns the blocks it was
+        the last entry to reference (None if the registry is empty)."""
+        if not self._entries:
+            return None
+        return self._release(self._entries.popitem(last=False)[1][1])
+
+    def clear(self) -> list[int]:
+        """Drop everything; returns all registry-referenced blocks."""
+        out = list(self._block_use)
+        self._entries.clear()
+        self._block_use.clear()
+        return out
 
 
 @dataclasses.dataclass(frozen=True)
@@ -103,6 +262,9 @@ class PoolStats:
     peak_in_use: int
     page_bytes: int  # bytes of one page across all layers (K+V)
     active_slots: int
+    shared_pages: int = 0  # physical pages referenced by >1 holder
+    total_refs: int = 0  # logical references (slot mappings + registry)
+    registry_pages: int = 0  # pages the prefix registry retains
 
     @property
     def utilization(self) -> float:
@@ -111,6 +273,15 @@ class PoolStats:
     @property
     def bytes_in_use(self) -> int:
         return self.in_use * self.page_bytes
+
+    @property
+    def bytes_saved(self) -> int:
+        """HBM that slot mappings beyond the first copy would have
+        duplicated without sharing.  The registry's own retention reference
+        is excluded — retaining a prefix for *future* sharers saves nothing
+        by itself."""
+        extra = self.total_refs - self.in_use - self.registry_pages
+        return max(0, extra) * self.page_bytes
 
 
 class PagedKVCache:
@@ -147,14 +318,18 @@ class PagedKVCache:
             num_blocks = max_batch * self.max_pages + 1
         self.num_blocks = num_blocks
         self.allocator = BlockAllocator(num_blocks)
+        self.registry = PrefixRegistry()
         self.pools = T.init_paged_cache(cfg, max_batch, num_blocks, block_size)
         # Host-side table; pushed to device per decode tick (tiny int32s).
         self.page_table = np.full(
             (max_batch, self.max_pages), TRASH_PAGE, np.int32)
         self._owned: list[list[int]] = [[] for _ in range(max_batch)]
         self.peak_pages_in_use = 0
-        self._scatter_jit: dict[int, Any] = {}
-        self._gather_jit: dict[int, Any] = {}
+        self.cow_forks = 0
+        self._scatter_jit: collections.OrderedDict = collections.OrderedDict()
+        self._gather_jit: collections.OrderedDict = collections.OrderedDict()
+        self._load_jit: collections.OrderedDict = collections.OrderedDict()
+        self._copy_jit: Any = None
 
     # -- accounting ------------------------------------------------------------
 
@@ -185,12 +360,28 @@ class PagedKVCache:
         return PoolStats(
             capacity=self.allocator.capacity, in_use=self.pages_in_use,
             peak_in_use=self.peak_pages_in_use, page_bytes=self.page_bytes,
-            active_slots=active_slots)
+            active_slots=active_slots,
+            shared_pages=self.allocator.shared_count,
+            total_refs=self.allocator.total_refs,
+            registry_pages=self.registry.blocks_held)
 
     def slot_pages(self, slot: int) -> list[int]:
         return list(self._owned[slot])
 
     # -- allocation ------------------------------------------------------------
+
+    def _alloc_blocks(self, n: int) -> list[int] | None:
+        """Free-list alloc with prefix reclaim: on shortfall, LRU-drop
+        registry entries (their blocks free once no slot shares them) until
+        the request fits or the registry is empty."""
+        pages = self.allocator.alloc(n)
+        while pages is None:
+            dropped = self.registry.pop_lru()
+            if dropped is None:
+                return None
+            self.allocator.free(dropped)
+            pages = self.allocator.alloc(n)
+        return pages
 
     def alloc(self, slot: int, length: int) -> bool:
         """Grow ``slot``'s page table to cover ``length`` rows (lazy: only
@@ -199,7 +390,7 @@ class PagedKVCache:
         need = self.pages_for(length) - len(self._owned[slot])
         if need <= 0:
             return True
-        pages = self.allocator.alloc(need)
+        pages = self._alloc_blocks(need)
         if pages is None:
             return False
         start = len(self._owned[slot])
@@ -209,13 +400,59 @@ class PagedKVCache:
             self.peak_pages_in_use, self.pages_in_use)
         return True
 
+    def map_shared(self, slot: int, blocks: list[int]) -> None:
+        """Map already-resident prefix blocks into the front of ``slot``'s
+        page table at refcount+1 — the SYNC prefix staged once, not copied.
+        The slot must be empty (sharing happens at admission)."""
+        assert not self._owned[slot], (slot, self._owned[slot])
+        self.allocator.incref(blocks)
+        self._owned[slot] = list(blocks)
+        self.page_table[slot, : len(blocks)] = blocks
+
+    def shield(self, slot: int) -> None:
+        """Point ``slot``'s table row at trash while keeping ownership.
+
+        An admission in progress is still a *padding row* of the interleaved
+        batched decode ticks; padding rows scatter garbage K/V through the
+        page table, which must land in the trash block — not in the slot's
+        pages (fatal for a mapped shared prefix, whose corruption every
+        sharer would read).  ``publish`` re-exposes the pages on activation.
+        """
+        self.page_table[slot, :] = TRASH_PAGE
+
+    def publish(self, slot: int) -> None:
+        """Re-expose ``slot``'s owned pages in the page table (after the
+        admission scatter, before the slot goes active)."""
+        pages = self._owned[slot]
+        self.page_table[slot, :] = TRASH_PAGE
+        self.page_table[slot, : len(pages)] = pages
+
     def ensure_write(self, slot: int, pos: int) -> bool:
         """Make position ``pos`` writable for ``slot`` (the lazy page fault
-        as ``cur`` advances)."""
-        return self.alloc(slot, pos + 1)
+        as ``cur`` advances).  If the target page is shared, fork it first
+        (copy-on-write): the write lands in a private copy, so the other
+        sharers never observe this slot's divergence."""
+        if not self.alloc(slot, pos + 1):
+            return False
+        idx = pos // self.block_size
+        blk = self._owned[slot][idx]
+        if self.allocator.refcount(blk) == 1:
+            return True
+        fresh = self._alloc_blocks(1)
+        if fresh is None:
+            return False  # caller preempts; the shared mapping stays valid
+        self._copy_block(blk, fresh[0])
+        self.allocator.free([blk])  # drop this slot's reference only
+        self._owned[slot][idx] = fresh[0]
+        self.page_table[slot, idx] = fresh[0]
+        self.cow_forks += 1
+        self.peak_pages_in_use = max(
+            self.peak_pages_in_use, self.pages_in_use)
+        return True
 
     def release(self, slot: int) -> None:
-        """Reclaim all of ``slot``'s pages and point its table at trash."""
+        """Drop ``slot``'s page references and point its table at trash;
+        blocks still shared (other slots / the prefix registry) stay."""
         if self._owned[slot]:
             self.allocator.free(self._owned[slot])
             self._owned[slot] = []
@@ -224,19 +461,88 @@ class PagedKVCache:
     def device_page_table(self) -> jax.Array:
         return jnp.asarray(self.page_table)
 
-    # -- page scatter / gather (admission, evict, readmit) ---------------------
+    # -- prefix registry (the SYNC transfer, staged once) ----------------------
+
+    def lookup_prefix(
+        self, tokens: np.ndarray, *, min_pages: int = 1,
+        align_tokens: int = 1,
+    ) -> tuple[int, list[int]]:
+        """Longest registered page-aligned *proper* prefix of ``tokens``.
+
+        ``align_tokens`` restricts matches to multiples of the caller's
+        prefill chunk so the uncovered tail re-runs the exact chunk grid a
+        full prefill would (token parity is bitwise, not approximate).
+        Returns (n_pages, blocks); (0, []) on miss.
+        """
+        tokens = np.asarray(tokens, np.int32)
+        bs = self.block_size
+        max_pages = (len(tokens) - 1) // bs  # proper: >= 1 tail token
+        for n in range(max_pages, max(1, min_pages) - 1, -1):
+            if align_tokens > 1 and (n * bs) % align_tokens:
+                continue
+            blocks = self.registry.get(tokens[: n * bs])
+            if blocks is not None:
+                return n, blocks
+        return 0, []
+
+    def register_prefix(
+        self, tokens: np.ndarray, slot: int, *, min_pages: int = 1,
+        align_tokens: int = 1,
+    ) -> None:
+        """Publish the page-aligned prefixes of ``slot``'s prompt so later
+        admissions can map its blocks.  ``align_tokens`` should mirror the
+        lookup's chunk alignment: entries at lengths the lookup never
+        probes would only burn registry slots and digest work.  Each entry
+        holds one registry-wide reference per distinct block; whole-page
+        prompt rows are never rewritten by this slot's decode (writes start
+        at ``len(tokens)``), so registered pages stay immutable until COW
+        or reclaim."""
+        tokens = np.asarray(tokens, np.int32)
+        bs = self.block_size
+        owned = self._owned[slot]
+        for n in range(max(1, min_pages), len(tokens) // bs + 1):
+            if align_tokens > 1 and (n * bs) % align_tokens:
+                continue
+            retained, released = self.registry.put(
+                tokens[: n * bs], owned[:n])
+            if retained:
+                self.allocator.incref(retained)
+            if released:
+                self.allocator.free(released)
+
+    def reclaim_for(self, n: int) -> bool:
+        """Drop LRU prefix entries until at least ``n`` pages are free.
+
+        False = the registry ran dry first: the pool is genuinely full of
+        slot-referenced pages and the caller must backpressure or preempt.
+        (Entries whose blocks are still shared by active slots free nothing
+        when dropped; the loop keeps going past them.)
+        """
+        while self.allocator.free_count < n:
+            dropped = self.registry.pop_lru()
+            if dropped is None:
+                return False
+            self.allocator.free(dropped)
+        return True
+
+    def clear_prefixes(self) -> None:
+        """Drop every registry entry (frees blocks no slot still shares)."""
+        self.allocator.free(self.registry.clear())
+
+    # -- page scatter / gather / copy (admission, evict, readmit, COW) ---------
 
     def _make_scatter(self, n_pages: int):
         bs = self.block_size
 
-        def fn(pools, src, pages, slot):
+        def fn(pools, src, pages, slot, row0):
             out = {"blocks": {}}
             for name, c in pools["blocks"].items():
                 sc = src["blocks"][name]
                 oc = {}
                 for key, leaf in c.items():
                     if key in ("k", "v"):
-                        rows = sc[key][:, 0, : n_pages * bs]
+                        rows = jax.lax.dynamic_slice_in_dim(
+                            sc[key][:, 0], row0, n_pages * bs, axis=1)
                         r = rows.shape[0]
                         rows = rows.reshape(
                             r, n_pages, bs, *rows.shape[2:]).astype(leaf.dtype)
@@ -270,17 +576,47 @@ class PagedKVCache:
 
         return jax.jit(fn)
 
-    def scatter(self, slot: int, caches: Any, length: int) -> None:
-        """Write a b=1 contiguous cache's first ``length`` rows into
-        ``slot``'s pages (admission after chunked prefill, or readmit).
-        The slot must already own ``pages_for(length)`` pages."""
-        n = self.pages_for(length)
-        assert len(self._owned[slot]) >= n, (slot, length, self._owned[slot])
-        if n not in self._scatter_jit:
-            self._scatter_jit[n] = self._make_scatter(n)
-        pages = jnp.asarray(self._owned[slot][:n], jnp.int32)
-        self.pools = self._scatter_jit[n](
-            self.pools, caches, pages, jnp.int32(slot))
+    def _make_load(self, n_pages: int):
+        bs = self.block_size
+
+        def fn(pools, caches, pages):
+            out = {"blocks": {}}
+            for name, dst in caches["blocks"].items():
+                c = pools["blocks"].get(name, {})
+                oc = {}
+                for key, leaf in dst.items():
+                    if key in ("k", "v") and key in c:
+                        g = c[key][:, pages]  # (r, n, bs, hkv, hd)
+                        r = g.shape[0]
+                        rows = g.reshape(r, n_pages * bs, *g.shape[3:])[:, None]
+                        oc[key] = jax.lax.dynamic_update_slice(
+                            leaf, rows.astype(leaf.dtype), (0,) * leaf.ndim)
+                    else:
+                        oc[key] = leaf
+                out["blocks"][name] = oc
+            return out
+
+        return jax.jit(fn)
+
+    def scatter(
+        self, slot: int, caches: Any, length: int, *, start_page: int = 0
+    ) -> None:
+        """Write a b=1 contiguous cache's rows ``[start_page * block_size,
+        length)`` into ``slot``'s pages (admission after chunked prefill, or
+        readmit).  The slot must already own ``pages_for(length)`` pages;
+        the target pages must be exclusively owned (shared prefix pages are
+        mapped, never scattered over)."""
+        n_total = self.pages_for(length)
+        n = n_total - start_page
+        assert n > 0 and len(self._owned[slot]) >= n_total, (
+            slot, length, start_page, self._owned[slot])
+        target = self._owned[slot][start_page:n_total]
+        assert all(self.allocator.refcount(p) == 1 for p in target), (
+            "scatter into a shared page would corrupt its sharers", target)
+        fn = _lru_jit(self._scatter_jit, n, lambda: self._make_scatter(n))
+        self.pools = fn(
+            self.pools, caches, jnp.asarray(target, jnp.int32),
+            jnp.int32(slot), jnp.int32(start_page * self.block_size))
 
     def gather(self, slot: int, length: int) -> Any:
         """Pull ``slot``'s first ``length`` rows out of the pool as a b=1
@@ -288,7 +624,33 @@ class PagedKVCache:
         page contents travel with the request)."""
         n = self.pages_for(length)
         assert len(self._owned[slot]) >= n, (slot, length, self._owned[slot])
-        if n not in self._gather_jit:
-            self._gather_jit[n] = self._make_gather(n)
+        fn = _lru_jit(self._gather_jit, n, lambda: self._make_gather(n))
         pages = jnp.asarray(self._owned[slot][:n], jnp.int32)
-        return self._gather_jit[n](self.pools, pages, jnp.int32(slot))
+        return fn(self.pools, pages, jnp.int32(slot))
+
+    def load_prefix(self, caches: Any, blocks: list[int]) -> Any:
+        """Copy ``blocks``' pool rows into the front of a b=1 contiguous
+        cache (the prefill context for the uncovered tail of a shared-prefix
+        admission).  Returns the updated cache pytree."""
+        n = len(blocks)
+        assert n > 0
+        fn = _lru_jit(self._load_jit, n, lambda: self._make_load(n))
+        return fn(self.pools, caches, jnp.asarray(blocks, jnp.int32))
+
+    def _copy_block(self, src: int, dst: int) -> None:
+        """Device-side page copy (the COW fork body)."""
+        if self._copy_jit is None:
+            def fn(pools, s, d):
+                out = {"blocks": {}}
+                for name, c in pools["blocks"].items():
+                    oc = {}
+                    for key, leaf in c.items():
+                        if key in ("k", "v"):
+                            oc[key] = leaf.at[:, d].set(leaf[:, s])
+                        else:
+                            oc[key] = leaf
+                    out["blocks"][name] = oc
+                return out
+
+            self._copy_jit = jax.jit(fn)
+        self.pools = self._copy_jit(self.pools, jnp.int32(src), jnp.int32(dst))

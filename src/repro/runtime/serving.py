@@ -55,6 +55,15 @@ Paged KV cache (``ServeConfig.paged=True``, see ``repro.runtime.kv_cache``):
     slot is preempted (pages gathered out, exactly like ``evict``) and
     readmitted when pages free up.  Greedy outputs stay token-identical to
     the contiguous path, which remains the ``paged=False`` default.
+  * **Prefix sharing (``ServeConfig.prefix_sharing``)** — a common prompt
+    prefix (shared system prompt) is the paging analog of the paper's SYNC
+    transfer: data every task needs, staged once before streaming begins.
+    Admission looks up the longest registered page-aligned prefix of the
+    prompt, maps those physical blocks into the slot's table at refcount+1
+    and chunk-prefills only the uncovered tail; whole pages free on
+    refcount-zero and fork on write (copy-on-write), so greedy outputs stay
+    token-identical to the unshared paged path while HBM footprint and
+    admission prefill compute drop with every sharer.
   * **Block size as a policy knob** — ``plan_decode_policy`` sizes
     ``block_size`` from the same measured stage times that pick chunk and
     interleave (task granularity is the dominant knob in ML-guided tuning
@@ -78,7 +87,7 @@ import numpy as np
 from repro.core import rmetric
 from repro.models import transformer as T
 from repro.models.transformer import ModelConfig
-from repro.runtime.kv_cache import PagedKVCache
+from repro.runtime.kv_cache import PagedKVCache, _lru_jit
 
 
 @dataclasses.dataclass
@@ -95,6 +104,8 @@ class ServeConfig:
     block_size: int = 16  # cache rows per page
     num_blocks: int | None = None  # pool size; None = contiguous-parity + trash
     paged_kernel: bool = False  # decode via the Pallas pool kernel (TPU path)
+    prefix_sharing: bool = False  # map common prompt prefixes COW (SYNC once)
+    prefix_min_pages: int = 1  # shortest prefix worth sharing, in pages
 
     def __post_init__(self) -> None:
         if self.max_seq < 1:
@@ -116,6 +127,13 @@ class ServeConfig:
         if self.block_size < 1:
             raise ValueError(
                 f"block_size must be >= 1, got {self.block_size}")
+        if self.prefix_min_pages < 1:
+            raise ValueError(
+                f"prefix_min_pages must be >= 1, got {self.prefix_min_pages}")
+        if self.prefix_sharing and not self.paged:
+            raise ValueError(
+                "prefix_sharing shares physical KV pages; it requires "
+                "paged=True")
         if self.paged:
             if self.max_seq % self.block_size != 0:
                 raise ValueError(
@@ -127,13 +145,19 @@ class ServeConfig:
                     f"got {self.num_blocks}")
 
 
+# Chunk fns specialize per (len, first, pos0); shared-prefix tails admit at
+# arbitrary page-aligned offsets, so the compile cache is a bounded LRU
+# instead of growing one entry per distinct offset over a server's lifetime.
+_CHUNK_JIT_CAP = 32
+
+
 class ServingEngine:
     def __init__(self, cfg: ModelConfig, params: Any, scfg: ServeConfig):
         self.cfg = cfg
         self.params = params
         self.scfg = scfg
         self._sample_jit: dict[float, Any] = {}
-        self._chunk_jit = {}
+        self._chunk_jit: collections.OrderedDict = collections.OrderedDict()
 
     def _decode_sample_fn(self, temperature: float):
         """Jitted decode step with on-device sampling fused in (one compile
@@ -155,7 +179,8 @@ class ServingEngine:
         the attention block-pair masks specialize per offset.
         """
         key = (chunk_len, first, pos0)
-        if key not in self._chunk_jit:
+
+        def make():
             cfg = self.cfg
             has_prefix = first and cfg.prefix_len > 0
 
@@ -186,8 +211,9 @@ class ServingEngine:
                 logits = layers.softcap(logits, cfg.final_softcap)
                 return logits, caches
 
-            self._chunk_jit[key] = jax.jit(fn)
-        return self._chunk_jit[key]
+            return jax.jit(fn)
+
+        return _lru_jit(self._chunk_jit, key, make, cap=_CHUNK_JIT_CAP)
 
     def prefill_streamed(
         self, tokens: jax.Array, *, enc_inputs=None, prefix_embeds=None
@@ -203,12 +229,21 @@ class ServingEngine:
         return logits, caches, pos
 
     def iter_prefill_chunks(
-        self, tokens: jax.Array, *, enc_inputs=None, prefix_embeds=None
+        self, tokens: jax.Array, *, enc_inputs=None, prefix_embeds=None,
+        caches=None, pos0: int = 0,
     ):
         """Generator form of the streamed prefill: yields after *dispatching*
         each chunk (JAX dispatch is async), so a caller can overlap other
         device work — the continuous-batching engine interleaves batched
         decode steps here — before the next chunk is enqueued.
+
+        ``caches``/``pos0`` continue a prefill whose first ``pos0`` cache
+        rows are already resident (prefix sharing: the SYNC prefix is staged
+        once and only the uncovered tail streams).  The chunk grid stays
+        anchored at absolute position 0 (the chunk size is picked from the
+        *full* length ``pos0 + s``), so when ``pos0`` is a multiple of that
+        chunk a continued prefill dispatches the exact same chunk tasks a
+        full prefill would — token parity is bitwise, not approximate.
 
         Yields (logits-so-far, caches, position-after-chunk) per chunk.
         """
@@ -217,14 +252,16 @@ class ServingEngine:
         enc_out = (
             T.encode(cfg, self.params, enc_inputs) if enc_inputs is not None
             else None)
-        caches = T.init_cache(
-            cfg, b, scfg.max_seq,
-            enc_seq=enc_out.shape[1] if enc_out is not None else None,
-            ring=False)  # streamed prefill needs full-length caches
+        if caches is None:
+            assert pos0 == 0, "a continued prefill needs its context cache"
+            caches = T.init_cache(
+                cfg, b, scfg.max_seq,
+                enc_seq=enc_out.shape[1] if enc_out is not None else None,
+                ring=False)  # streamed prefill needs full-length caches
         # prefix (SYNC transfer) rides with the first chunk
-        chunk = min(scfg.prefill_chunk, s)
-        pos = 0
-        first = True
+        chunk = min(scfg.prefill_chunk, pos0 + s)
+        pos = pos0
+        first = pos0 == 0
         for lo in range(0, s, chunk):
             piece = tokens[:, lo: lo + chunk]
             fn = self._prefill_chunk_fn(piece.shape[1], first, pos)
@@ -315,6 +352,8 @@ class EvictedRequest:
     emitted: list[int]
     max_new: int
     n_pages: int = 0  # pages gathered (0 = contiguous eviction)
+    seq: int = 0  # original admission order — restored on readmit so a
+    # preempted request never becomes the "youngest" (preemption victim) again
 
 
 @dataclasses.dataclass(frozen=True)
@@ -326,6 +365,15 @@ class ServingPlan:
     decode_interleave: int
     stage_times: rmetric.StageTimes
     block_size: int = 16  # KV page granularity for the paged cache
+
+    def __post_init__(self) -> None:
+        # A plan is a contract: PagedKVCache/ServeConfig would reject these,
+        # so refuse to emit them in the first place.
+        for field in ("prefill_chunk", "decode_interleave", "block_size"):
+            if getattr(self, field) < 1:
+                raise ValueError(
+                    f"invalid plan: {field} must be >= 1, got "
+                    f"{getattr(self, field)}")
 
 
 def plan_block_size(
@@ -354,6 +402,13 @@ def plan_block_size(
     if max_seq is not None:
         while block > min_block and max_seq % block != 0:
             block //= 2
+        if max_seq % block != 0:
+            # The pow2 search bottomed out at min_block without finding a
+            # divisor (e.g. max_seq=100, min_block=8): PagedKVCache.__init__
+            # would reject the plan.  Pages must tile the cache, so validity
+            # beats the min_block preference — fall back to the largest real
+            # divisor of max_seq at or below the granularity target.
+            block = next(d for d in range(block, 0, -1) if max_seq % d == 0)
     return block
 
 
@@ -419,6 +474,11 @@ class StreamedBatchEngine:
         if scfg.max_batch < 1:
             raise ValueError(  # an empty slot pool would spin forever
                 f"max_batch must be >= 1, got {scfg.max_batch}")
+        if scfg.prefix_sharing and any(
+                spec.mixer == "mamba" for spec in cfg.layer_unit):
+            raise NotImplementedError(
+                "prefix sharing maps attention KV pages; mamba/hybrid archs "
+                "carry per-slot SSM state with no page-granular snapshot")
         self.cfg = cfg
         self.params = params
         self.scfg = scfg
@@ -443,6 +503,17 @@ class StreamedBatchEngine:
         self._evicted_out = 0  # outstanding evictions (pin pool geometry)
         self.decode_steps = 0  # batched decode steps run (for benchmarks)
         self.peak_active = 0  # max concurrently-resident requests (bench)
+        self.preemptions = 0  # page-pressure evictions (bench / regression)
+        self.admissions = 0  # fresh admissions (readmit is bookkeeping)
+        self.admit_seconds = 0.0  # end-to-end admission latency: queue-pop
+        # to first sampled token, per request.  Interleaved decode ticks for
+        # other slots ride along deliberately — they scale with the number
+        # of prefill chunks, which is exactly what prefix sharing cuts.
+        self.prefix_hits = 0  # admissions that mapped a shared prefix
+        self.prefix_pages_shared = 0  # pages mapped instead of prefilled
+        self._gate_match: tuple[int, int, list[int]] | None = None  # the
+        # admission gate's prefix match, handed to _admit (avoids a second
+        # lookup; valid because nothing runs between gate and admission)
 
         # Decode step with on-device sampling fused in: a tick moves one
         # int32 per slot to the host, never the (B, vocab) logits.  With
@@ -542,21 +613,65 @@ class StreamedBatchEngine:
         """Chunked prefill of ``req`` interleaved with batched decode steps,
         then scatter its cache into ``slot``'s rows (contiguous) or pages
         (paged; the pages are reserved up front so the interleaved ticks'
-        lazy allocation can never steal them)."""
+        lazy allocation can never steal them).
+
+        With ``prefix_sharing`` the longest registered page-aligned prefix
+        of the prompt is mapped straight into the slot's page table at
+        refcount+1 (the SYNC transfer staged once, §4.1) and only the
+        uncovered tail is prefilled; matches are restricted to multiples of
+        the prompt's chunk size so the tail re-runs the exact chunk tasks a
+        full prefill would (bitwise token parity with the unshared path).
+        """
+        t0 = time.perf_counter()
+        shared_pages = 0
         if self.paged:
-            ok = self.kv.alloc(slot.index, len(req.tokens))
+            if self.scfg.prefix_sharing:
+                if self._gate_match and self._gate_match[0] == req.uid:
+                    _, shared_pages, blocks = self._gate_match
+                else:  # direct _admit call (tests): no gate ran
+                    shared_pages, blocks = self._lookup_prefix(req)
+                self._gate_match = None
+                if shared_pages:
+                    self.kv.map_shared(slot.index, blocks)
+                    self.prefix_hits += 1
+                    self.prefix_pages_shared += shared_pages
+            # Reserve through the *first decode write* (len + 1): reserving
+            # only the prompt pages would pay the full prefill and then
+            # fault (and likely bounce) on the very next tick whenever the
+            # prompt is page-aligned — the same off-by-one as readmit's.
+            ok = self.kv.alloc(slot.index, len(req.tokens) + 1)
             assert ok, "admission checked free pages before popping the queue"
-        tokens = jnp.asarray(req.tokens[None], jnp.int32)
+            # Until the slot goes active it is a padding row of the
+            # interleaved decode ticks below: its garbage writes must go to
+            # the trash block, not into the reserved (possibly shared) pages.
+            self.kv.shield(slot.index)
+        shared_len = shared_pages * self.scfg.block_size
+        tokens = jnp.asarray(req.tokens[None, shared_len:], jnp.int32)
+        caches0 = None
+        if shared_len:
+            # The tail's b=1 prefill context: shared pages gathered into the
+            # front of a fresh full-length cache.  The pool pages themselves
+            # are never rewritten — the slot reads them through its table.
+            caches0 = self.kv.load_prefix(
+                T.init_cache(self.cfg, 1, self.scfg.max_seq, ring=False),
+                self.kv.slot_pages(slot.index)[:shared_pages])
         logits = caches = None
-        pos = 0
-        for logits, caches, pos in self.single.iter_prefill_chunks(tokens):
+        pos = shared_len
+        for logits, caches, pos in self.single.iter_prefill_chunks(
+                tokens, caches=caches0, pos0=shared_len):
             # Chunk is dispatched (async); decode the active slots while it
             # is in flight — prefill chunk t+1 overlapping decode compute.
             for _ in range(self.scfg.decode_interleave):
                 if self.active_slots:
                     self._decode_tick()
         if self.paged:
-            self.kv.scatter(slot.index, caches, pos)
+            self.kv.scatter(slot.index, caches, pos, start_page=shared_pages)
+            self.kv.publish(slot.index)
+            if self.scfg.prefix_sharing:
+                self.kv.register_prefix(
+                    req.tokens, slot.index,
+                    min_pages=self.scfg.prefix_min_pages,
+                    align_tokens=self.scfg.prefill_chunk)
         else:
             self.caches = self._scatter_jit(
                 self.caches, caches, jnp.int32(slot.index))
@@ -569,6 +684,8 @@ class StreamedBatchEngine:
         slot.seq = self._admit_seq
         self._admit_seq += 1
         self.peak_active = max(self.peak_active, len(self.active_slots))
+        self.admissions += 1
+        self.admit_seconds += time.perf_counter() - t0
         self._reap(slot)
 
     def _reap(self, slot: _Slot) -> None:
@@ -588,7 +705,36 @@ class StreamedBatchEngine:
             return False
         victim = max(victims, key=lambda s: s.seq)
         self._preempted.append(self.evict(victim.uid))
+        self.preemptions += 1
         return True
+
+    def _lookup_prefix(self, req: Request) -> tuple[int, list[int]]:
+        """Shared-prefix match for ``req`` ((0, []) without sharing or on
+        miss).  The lookup also LRU-bumps the matched entry, protecting it
+        from the reclaim the admission gate may run next."""
+        if not (self.paged and self.scfg.prefix_sharing):
+            return 0, []
+        chunk = min(self.scfg.prefill_chunk, len(req.tokens))
+        return self.kv.lookup_prefix(
+            req.tokens, min_pages=self.scfg.prefix_min_pages,
+            align_tokens=chunk)
+
+    def _admission_fits(self, req: Request) -> bool:
+        """Admission gate: can ``req`` take a slot right now?  Counts pages
+        through the first decode write (len + 1), credits a shared-prefix
+        match (mapped, not allocated), and reclaims retained prefixes when
+        still short.  Re-checks after reclaiming because reclaim may have
+        dropped the matched entry itself.  The surviving match is stashed
+        for ``_admit`` so the admission doesn't repeat the lookup."""
+        full = self.kv.pages_for(len(req.tokens) + 1)
+        for _ in range(3):  # match -> reclaim -> match-dropped converges
+            n, blocks = self._lookup_prefix(req)
+            if full - n <= self.kv.free_pages:
+                self._gate_match = (req.uid, n, blocks)
+                return True
+            if not self.kv.reclaim_for(full - n):
+                return False
+        return False
 
     def _decode_tick(self) -> None:
         """One batched decode step for all slots (inactive rows are padding).
@@ -609,6 +755,7 @@ class StreamedBatchEngine:
                 while not self.kv.ensure_write(s.index, s.cur):
                     if not self._preempt_for_pages(frozenset({s.index})):
                         self._preempted.append(self.evict(s.uid))
+                        self.preemptions += 1
                         break
         act = self.active_slots
         if not act:
@@ -659,17 +806,22 @@ class StreamedBatchEngine:
         """
         progressed = False
         if self.paged:
-            while (self._preempted
-                   and any(s.free for s in self.slots)
-                   and self.kv.pages_for(self._preempted[0].cur)
-                   <= self.kv.free_pages):
+            # Gate on cur + 1, not cur: the very next decode tick writes at
+            # position cur, so a page-aligned cur needs one more page than
+            # the snapshot covers — gating on cur alone readmits a slot that
+            # faults immediately and bounces straight back here.  Retained
+            # prefix pages are reclaimable, so count them before giving up.
+            while self._preempted and any(s.free for s in self.slots):
+                need = self.kv.pages_for(self._preempted[0].cur + 1)
+                if (need > self.kv.free_pages
+                        and not self.kv.reclaim_for(need)):
+                    break
                 self.readmit(self._preempted.popleft())
                 progressed = True
         free = [s for s in self.slots if s.free]
         while self.queue and free:
             req = self.queue[0]
-            if (self.paged and self.kv.pages_for(len(req.tokens))
-                    > self.kv.free_pages):
+            if self.paged and not self._admission_fits(req):
                 break  # backpressure: wait for pages, keep decoding
             self.queue.popleft()
             self._admit(req, free.pop(0))
@@ -709,7 +861,7 @@ class StreamedBatchEngine:
             uid=uid, caches=caches,
             cur=slot.cur, pending=slot.pending,
             emitted=list(slot.emitted), max_new=slot.max_new,
-            n_pages=n_pages)
+            n_pages=n_pages, seq=slot.seq)
         slot.uid = None
         slot.emitted = []
         self._evicted_out += 1
@@ -722,10 +874,14 @@ class StreamedBatchEngine:
         if slot is None:
             raise RuntimeError("no free slot to readmit into")
         if self.paged:
-            if not self.kv.alloc(slot.index, ev.cur):
+            # cur + 1: the next tick writes at position cur, so when cur is
+            # page-aligned one more page than the snapshot is needed now —
+            # allocating it here instead of faulting next tick keeps a
+            # freshly readmitted slot from bouncing straight back out.
+            if not self.kv.alloc(slot.index, ev.cur + 1):
                 raise RuntimeError(
                     f"not enough free pages to readmit uid {ev.uid} "
-                    f"(need {self.kv.pages_for(ev.cur)}, "
+                    f"(need {self.kv.pages_for(ev.cur + 1)}, "
                     f"free {self.kv.free_pages})")
             self.kv.scatter(slot.index, ev.caches, ev.cur)
         else:
@@ -736,8 +892,10 @@ class StreamedBatchEngine:
         slot.pending = ev.pending
         slot.emitted = list(ev.emitted)
         slot.max_new = ev.max_new
-        slot.seq = self._admit_seq
-        self._admit_seq += 1
+        # Restore the original admission order: a fresh seq here would make
+        # every readmitted request the "youngest" and thus the next victim
+        # of _preempt_for_pages — preempt/readmit thrash under pressure.
+        slot.seq = ev.seq
         self._evicted_out -= 1
         self.peak_active = max(self.peak_active, len(self.active_slots))
         return slot.index
@@ -790,6 +948,13 @@ class StreamedBatchEngine:
             max_seq=self.scfg.max_seq)
         self.scfg.prefill_chunk = plan.prefill_chunk
         self.scfg.decode_interleave = plan.decode_interleave
+        if (self.paged and plan.block_size != self.scfg.block_size
+                and not self.active_slots and self._evicted_out == 0
+                and len(self.kv.registry)):
+            # With no slot resident, only the prefix registry is pinning
+            # pages (old-geometry prefixes are useless after a rebuild
+            # anyway): drop it so the idle pool can adopt the planned size.
+            self.kv.clear_prefixes()
         if (self.paged and plan.block_size != self.scfg.block_size
                 and self.kv.pages_in_use == 0
                 and self._evicted_out == 0

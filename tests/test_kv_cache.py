@@ -1,6 +1,9 @@
-"""Paged KV-cache subsystem: allocator properties, paged-vs-contiguous
-greedy parity, lazy page allocation, free-list backpressure/preemption and
-evict/readmit page-content preservation."""
+"""Paged KV-cache subsystem: allocator properties (refcounted), paged-vs-
+contiguous greedy parity, lazy page allocation, free-list backpressure/
+preemption, evict/readmit page-content preservation, and copy-on-write
+prefix sharing (the SYNC transfer staged once)."""
+
+import collections
 
 import jax
 import numpy as np
@@ -70,12 +73,51 @@ class TestBlockAllocator:
         assert alloc.used_count == 0
         assert seen_total <= set(range(1, alloc.num_blocks))
 
+    @given(seed=st.integers(0, 10**9))
+    @settings(max_examples=30, deadline=None)
+    def test_refcounted_share_free_invariants(self, seed):
+        """Sharing model: every grant (alloc or incref) owes exactly one
+        ``free``; a block stays allocated while any reference is live and
+        the pool fully reclaims once the last one drops."""
+        rng = np.random.default_rng(seed)
+        alloc = BlockAllocator(int(rng.integers(2, 24)))
+        held: list[list[int]] = []  # each element owes one free()
+        for _ in range(300):
+            r = rng.random()
+            if held and r < 0.3:
+                alloc.free(held.pop(int(rng.integers(len(held)))))
+            elif held and r < 0.55:
+                grant = held[int(rng.integers(len(held)))]
+                alloc.incref(grant)  # share: one more free() owed
+                held.append(list(grant))
+            else:
+                pages = alloc.alloc(int(rng.integers(0, alloc.capacity + 1)))
+                if pages:
+                    held.append(pages)
+            counts = collections.Counter(p for g in held for p in g)
+            assert alloc.used_count == len(counts)  # held while referenced
+            assert alloc.free_count == alloc.capacity - len(counts)
+            assert alloc.total_refs == sum(counts.values())
+            assert alloc.shared_count == sum(
+                1 for c in counts.values() if c > 1)
+            for p, c in counts.items():
+                assert alloc.refcount(p) == c
+        for grant in held:
+            alloc.free(grant)
+        assert alloc.free_count == alloc.capacity  # full reclaim
+        assert alloc.used_count == 0 and alloc.total_refs == 0
+
     def test_double_free_rejected(self):
         alloc = BlockAllocator(4)
         pages = alloc.alloc(2)
         alloc.free(pages)
         with pytest.raises(ValueError):
             alloc.free(pages)
+
+    def test_incref_unallocated_rejected(self):
+        alloc = BlockAllocator(4)
+        with pytest.raises(ValueError):
+            alloc.incref([2])
 
     def test_trash_pool_too_small(self):
         with pytest.raises(ValueError):
@@ -226,6 +268,110 @@ class TestBackpressure:
             paged=True, block_size=16, num_blocks=4))
         with pytest.raises(ValueError):  # needs 4 pages, pool holds 3
             eng.submit(np.zeros(56, np.int32), max_new_tokens=8)
+
+
+class TestPrefixSharing:
+    """COW prefix sharing: refcounted block mapping, fork-on-write
+    isolation, token parity with the unshared paged engine, and registry
+    reclaim under pool pressure."""
+
+    def test_cow_fork_isolation(self, served):
+        """A write into a shared page forks it first: the writer gets a
+        private copy (same contents) and the sharer's view never changes."""
+        cfg, _ = served
+        kv = PagedKVCache(cfg, max_batch=2, max_seq=64, block_size=16)
+        assert kv.alloc(0, 16)
+        blk = kv.slot_pages(0)[0]
+        for name, c in kv.pools["blocks"].items():
+            for key in ("k", "v"):
+                if key in c:
+                    kv.pools["blocks"][name][key] = (
+                        c[key].at[:, blk].set(1.0))
+        kv.map_shared(1, [blk])
+        assert kv.allocator.refcount(blk) == 2
+        st_ = kv.stats()
+        assert st_.shared_pages == 1 and st_.total_refs == 2
+        assert st_.in_use == 1  # one physical page serves both tables
+        assert st_.bytes_saved == st_.page_bytes
+
+        assert kv.ensure_write(1, 3)  # write inside the shared page
+        fork = kv.slot_pages(1)[0]
+        assert fork != blk and kv.cow_forks == 1
+        assert kv.page_table[1, 0] == fork and kv.page_table[0, 0] == blk
+        assert kv.allocator.refcount(blk) == 1
+        assert kv.allocator.refcount(fork) == 1
+        for c in kv.pools["blocks"].values():
+            for key in ("k", "v"):
+                if key in c:  # the fork starts as an exact copy
+                    np.testing.assert_array_equal(
+                        np.asarray(c[key][:, fork]),
+                        np.asarray(c[key][:, blk]))
+        # the writer's divergence is invisible to the sharer
+        name0 = next(iter(kv.pools["blocks"]))
+        k = kv.pools["blocks"][name0]["k"]
+        kv.pools["blocks"][name0]["k"] = k.at[:, fork].set(2.0)
+        np.testing.assert_array_equal(
+            np.asarray(kv.pools["blocks"][name0]["k"][:, blk]),
+            np.ones_like(np.asarray(k[:, blk])))
+        kv.release(0)
+        kv.release(1)
+        assert kv.pages_in_use == 0  # full reclaim after both drop
+
+    def test_token_parity_and_fewer_pages(self, served):
+        """The acceptance bar: 4 requests sharing a 2-page system prompt
+        decode token-identically to the unshared paged engine while the
+        pool peaks strictly lower (the SYNC prefix is resident once)."""
+        cfg, params = served
+        system = _prompts(cfg, [32], seed=41)[0]
+        tails = _prompts(cfg, [8, 16, 24, 8], seed=47)
+        prompts = [np.concatenate([system, t]) for t in tails]
+        scfg = ServeConfig(max_seq=96, prefill_chunk=16, max_new_tokens=6,
+                           max_batch=4)
+        single = ServingEngine(cfg, params, scfg)
+        want = [np.asarray(single.generate(p[None])[0]) for p in prompts]
+
+        base = dict(max_seq=96, prefill_chunk=16, max_new_tokens=6,
+                    max_batch=4, paged=True, block_size=16)
+        e_off = StreamedBatchEngine(cfg, params, ServeConfig(**base))
+        e_on = StreamedBatchEngine(cfg, params, ServeConfig(
+            **base, prefix_sharing=True, prefix_min_pages=2))
+        u_off = [e_off.submit(p) for p in prompts]
+        u_on = [e_on.submit(p) for p in prompts]
+        r_off, r_on = e_off.run(), e_on.run()
+        for uid, ref in zip(u_off, want):
+            np.testing.assert_array_equal(r_off[uid], ref)
+        for uid, ref in zip(u_on, want):
+            np.testing.assert_array_equal(r_on[uid], ref)
+        assert e_on.prefix_hits == 3  # requests 2..4 mapped the prefix
+        assert e_on.prefix_pages_shared == 6  # 2 pages x 3 sharers
+        assert e_on.kv.peak_pages_in_use < e_off.kv.peak_pages_in_use
+        # the registry retains the prefix for future admissions ...
+        assert e_on.kv.pages_in_use > 0 and len(e_on.kv.registry) > 0
+        # ... and hands everything back when dropped
+        e_on.kv.clear_prefixes()
+        assert e_on.kv.pages_in_use == 0
+
+    def test_registry_reclaim_unblocks_admission(self, served):
+        """Retained prefix pages are reclaimable, not leaked: a request
+        whose prompt needs them is admitted after LRU reclaim instead of
+        backpressuring forever against an idle pool."""
+        cfg, params = served
+        eng = StreamedBatchEngine(cfg, params, ServeConfig(
+            max_seq=96, prefill_chunk=16, max_new_tokens=8, max_batch=2,
+            paged=True, block_size=16, num_blocks=7, prefix_sharing=True))
+        p0 = _prompts(cfg, [48], seed=61)[0]
+        u0 = eng.submit(p0)
+        out = eng.run()
+        assert u0 in out
+        retained = eng.kv.pages_in_use
+        assert retained > 0 and len(eng.kv.registry) > 0
+        # pages_for(64) = 4 > 6 - 3 retained: admission must reclaim
+        p1 = _prompts(cfg, [64], seed=62)[0]
+        u1 = eng.submit(p1, max_new_tokens=8)
+        out = eng.run()
+        assert u1 in out and len(out[u1]) == 8
+        # p0's retained prefix entries were LRU-dropped to make room
+        assert eng.kv.lookup_prefix(p0) == (0, [])
 
 
 class TestEvictReadmit:

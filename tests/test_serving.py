@@ -8,7 +8,7 @@ import pytest
 import repro.configs as C
 from repro.core import rmetric
 from repro.models import transformer as T
-from repro.runtime.serving import (ServeConfig, ServingEngine,
+from repro.runtime.serving import (ServeConfig, ServingEngine, ServingPlan,
                                    StreamedBatchEngine, plan_decode_policy)
 
 
@@ -110,6 +110,106 @@ class TestContinuousBatching:
             StreamedBatchEngine(cfg_pg, {}, ServeConfig())
 
 
+class TestSchedulerFixes:
+    """Regression tests for the paged-scheduler preemption/readmission
+    bugs: readmit seq starvation, and the readmit page-gate off-by-one."""
+
+    def test_readmit_restores_admission_seq(self, served):
+        """A preempted-then-readmitted request keeps its original admission
+        seq; a fresh seq would make it the 'youngest' and thus the next
+        preemption victim every time (starvation thrash)."""
+        cfg, params = served
+        scfg = ServeConfig(max_seq=64, prefill_chunk=16, max_new_tokens=8,
+                           max_batch=2, paged=True, block_size=16)
+        p0, p1 = _prompts(cfg, [24, 24], seed=71)
+        single = ServingEngine(cfg, params, scfg)
+        refs = [np.asarray(single.generate(p[None])[0]) for p in (p0, p1)]
+        eng = StreamedBatchEngine(cfg, params, scfg)
+        u0, u1 = eng.submit(p0), eng.submit(p1)
+        eng.step()  # admits both (u0 older than u1)
+        orig = next(s for s in eng.slots if s.uid == u0).seq
+        ev = eng.evict(u0)
+        assert ev.seq == orig  # the seq travels with the eviction
+        eng.readmit(ev)
+        assert next(s for s in eng.slots if s.uid == u0).seq == orig
+        # under page pressure the genuinely-younger u1 is the victim, not
+        # the readmitted u0
+        assert eng._preempt_for_pages(frozenset())
+        assert eng._preempted[0].uid == u1
+        out = eng.run()
+        np.testing.assert_array_equal(out[u0], refs[0])
+        np.testing.assert_array_equal(out[u1], refs[1])
+
+    def test_two_slot_thrash_completes(self, served):
+        """Two slots squeezed into a pool too small for both requests'
+        full growth: repeated preempt/readmit cycles must converge with
+        token-identical outputs (no readmission starvation)."""
+        cfg, params = served
+        scfg = ServeConfig(max_seq=64, prefill_chunk=16, max_new_tokens=32,
+                           max_batch=2, paged=True, block_size=16,
+                           num_blocks=8)
+        p0, p1 = _prompts(cfg, [32, 32], seed=73)
+        single = ServingEngine(cfg, params, scfg)
+        refs = [np.asarray(single.generate(p[None])[0]) for p in (p0, p1)]
+        eng = StreamedBatchEngine(cfg, params, scfg)
+        u0, u1 = eng.submit(p0), eng.submit(p1)
+        out = eng.run()
+        assert eng.preemptions >= 1  # the pool genuinely squeezed
+        np.testing.assert_array_equal(out[u0], refs[0])
+        np.testing.assert_array_equal(out[u1], refs[1])
+        assert eng.kv.pages_in_use == 0
+
+    def test_admission_gate_covers_next_write(self, served):
+        """Fresh admissions have the same +1 requirement as readmits: a
+        page-aligned prompt admitted into an exact-fit pool would pay the
+        whole prefill and then fault (bounce) on its first decode write —
+        the gate must backpressure instead."""
+        cfg, params = served
+        eng = StreamedBatchEngine(cfg, params, ServeConfig(
+            max_seq=64, prefill_chunk=16, max_new_tokens=4, max_batch=2,
+            paged=True, block_size=16, num_blocks=4))
+        grab = eng.kv.allocator.alloc(2)  # leave 1 of 3 usable pages
+        u0 = eng.submit(np.arange(16, dtype=np.int32))  # exactly one page
+        eng.step()  # pages_for(17) = 2 > 1 free: must hold the request
+        assert all(s.free for s in eng.slots) and len(eng.queue) == 1
+        eng.kv.allocator.free(grab)
+        out = eng.run()
+        assert u0 in out and len(out[u0]) == 4
+        assert eng.preemptions == 0  # never admitted-then-bounced
+
+    def test_readmit_gate_covers_next_write(self, served):
+        """The readmit gate must budget for the *next* decode write
+        (cur + 1): with cur page-aligned and exactly pages_for(cur) free,
+        readmitting would fault immediately and bounce the slot straight
+        back to the preempted queue."""
+        cfg, params = served
+        scfg = ServeConfig(max_seq=64, prefill_chunk=16, max_new_tokens=8,
+                           max_batch=2, paged=True, block_size=16,
+                           num_blocks=5)
+        p0 = _prompts(cfg, [15], seed=79)[0]
+        ref = np.asarray(
+            ServingEngine(cfg, params, scfg).generate(p0[None])[0])
+        eng = StreamedBatchEngine(cfg, params, scfg)
+        u0 = eng.submit(p0)
+        eng.step()  # admit (1 page)
+        eng.step()  # one decode tick: cur 15 -> 16, exactly page-aligned
+        assert next(s for s in eng.slots if s.uid == u0).cur == 16
+        ev = eng.evict(u0)
+        assert ev.cur == 16
+        eng._preempted.append(ev)
+        grab = eng.kv.allocator.alloc(3)  # leave exactly one free page
+        assert grab is not None and eng.kv.free_pages == 1
+        eng.step()  # pages_for(cur)=1 fits, but the next write wouldn't:
+        assert len(eng._preempted) == 1  # ... the gate must hold it back
+        assert all(s.free for s in eng.slots)
+        eng.kv.allocator.free(grab)
+        eng.step()  # two pages free now: readmit
+        assert any(s.uid == u0 for s in eng.slots)
+        out = eng.run()
+        np.testing.assert_array_equal(out[u0], ref)
+        assert eng.preemptions == 0  # never readmitted-then-bounced
+
+
 class TestPolicy:
     def test_stream_band_plans_chunks_and_interleave(self):
         t = rmetric.StageTimes(h2d=0.004, kex=0.002)  # R in the band
@@ -145,6 +245,43 @@ class TestPolicy:
         plan = plan_decode_policy(t, prompt_len=256, max_seq=96)
         assert plan.block_size == 32  # 128 -> halved until it tiles 96
         assert 96 % plan.block_size == 0
+
+    @pytest.mark.parametrize("max_seq", [100, 72, 30, 7, 1])
+    def test_block_size_always_divides_max_seq(self, max_seq):
+        """The pow2 halving can bottom out at min_block without dividing
+        max_seq (e.g. 100 % 8 != 0): the plan must fall back to a real
+        divisor that PagedKVCache accepts, never emit invalid geometry."""
+        for t in (rmetric.StageTimes(h2d=0.0001, kex=0.1),
+                  rmetric.StageTimes(h2d=0.004, kex=0.002)):
+            plan = plan_decode_policy(t, prompt_len=256, max_seq=max_seq)
+            assert plan.block_size >= 1
+            assert max_seq % plan.block_size == 0
+            # the planned geometry actually constructs
+            ServeConfig(max_seq=max_seq, paged=True,
+                        block_size=plan.block_size)
+
+    def test_serving_plan_rejects_invalid_fields(self):
+        t = rmetric.StageTimes(h2d=0.001, kex=0.001)
+        with pytest.raises(ValueError):
+            ServingPlan("stream", 0, 1, t)
+        with pytest.raises(ValueError):
+            ServingPlan("stream", 16, 0, t)
+        with pytest.raises(ValueError):
+            ServingPlan("stream", 16, 1, t, block_size=0)
+
+    @pytest.mark.slow
+    def test_sharing_bench_smoke(self, served):
+        """End-to-end smoke of the prefix-sharing bench (the acceptance
+        measurement: fewer pages + faster admission at token parity)."""
+        import pathlib
+        import sys
+        sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))
+        from benchmarks import bench_serving
+        cfg, params = served
+        lines = bench_serving.run_sharing(
+            cfg, params, n_requests=4, strict_latency=False)
+        assert any(l.startswith("serving_prefix_peak_pages") for l in lines)
+        assert any(l.startswith("serving_prefix_admit_ms") for l in lines)
 
     def test_autotune_applies_plan(self, served):
         cfg, params = served
