@@ -3,7 +3,7 @@
 # serving bench smoke (tests/test_serving.py -m slow).
 PYTHONPATH := src
 
-.PHONY: test test-slow bench
+.PHONY: test test-slow bench tune
 
 test:  ## tier-1 gate (pytest.ini already excludes -m slow)
 	PYTHONPATH=$(PYTHONPATH) python -m pytest -x -q -m "not slow"
@@ -13,3 +13,9 @@ test-slow:  ## heavy end-to-end paths + the sharing bench smoke
 
 bench:  ## paper-figure benchmarks (CSV to stdout)
 	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.run
+
+tune:  ## capped-budget smoke tune on CPU; plan persists to .tuning-cache/
+	PYTHONPATH=$(PYTHONPATH) JAX_PLATFORMS=cpu python -m repro.launch.serve \
+	    --arch qwen3-4b --requests 4 --prompt-len 64 --new-tokens 8 \
+	    --prefill-chunk 16 --max-batch 2 --paged \
+	    --autotune --tune-budget 6 --tuning-db .tuning-cache/tuning.json

@@ -20,6 +20,12 @@ and without ``prefix_sharing`` — and reports peak pool pages, the HBM the
 sharing saved, and mean admission latency.  The acceptance bar: strictly
 fewer pages in use and lower admission latency with sharing on, while
 greedy outputs stay token-identical.
+
+The tuning section (``run_tuned``) runs the measurement-driven tuner
+(``repro.tuning``) at a capped budget and reports tuned-vs-analytic
+measured tokens/s on the same workload — the A/B every future perf PR can
+be judged against.  Acceptance: tuned >= analytic, greedy outputs bitwise
+identical to the untuned paged path.
 """
 
 from __future__ import annotations
@@ -131,6 +137,60 @@ def run_sharing(
     ]
 
 
+def run_tuned(
+    cfg=None, params=None, *, n_requests: int = 4, prompt_len: int = 48,
+    new_tokens: int = 8, max_batch: int = 2, max_trials: int = 6,
+) -> list[str]:
+    """Tuned-vs-analytic A/B (the measurement-driven tuner's acceptance
+    bar): a capped-budget ``repro.tuning`` search over the paged engine's
+    knobs must find a plan whose *measured* tokens/s is >= the analytic
+    warm start's on the identical workload, with greedy outputs bitwise
+    identical to the untuned paged path.  Every future perf PR can rerun
+    this section as its baseline."""
+    from repro import tuning
+    if cfg is None:
+        cfg = C.get_smoke_config(ARCH)
+        params = T.init_params(cfg, jax.random.PRNGKey(0))
+    max_seq = -(-(prompt_len + 16 + new_tokens) // BLOCK_SIZE) * BLOCK_SIZE
+    scfg = ServeConfig(
+        max_seq=max_seq, prefill_chunk=16, max_new_tokens=new_tokens,
+        max_batch=max_batch, paged=True, block_size=BLOCK_SIZE)
+    desc = tuning.WorkloadDescriptor(
+        prompt_len_mean=prompt_len, prompt_len_max=prompt_len + 16,
+        max_new_tokens=new_tokens, n_requests=n_requests)
+    plan = tuning.search_tuned_plan(
+        cfg, params, scfg, desc,
+        budget=tuning.SearchBudget(max_trials=max_trials, sweeps=1))
+    assert plan.tokens_per_s >= plan.baseline_tokens_per_s, (
+        "the search scores the analytic warm start itself, so the tuned "
+        f"plan can never be slower ({plan.tokens_per_s:.1f} vs "
+        f"{plan.baseline_tokens_per_s:.1f})")
+
+    # Fresh A/B outside the search, same workload: tuned plan vs the
+    # untuned paged base — and the parity contract, re-checked end to end.
+    untuned = tuning.measure_workload(
+        lambda: StreamedBatchEngine(cfg, params, scfg), desc,
+        vocab_size=cfg.vocab_size)
+    tuned = tuning.measure_workload(
+        lambda: StreamedBatchEngine(cfg, params, scfg, plan=plan), desc,
+        vocab_size=cfg.vocab_size)
+    for i in untuned.outputs:
+        np.testing.assert_array_equal(tuned.outputs[i], untuned.outputs[i])
+    return [
+        f"tuning_tokens_per_s,{plan.tokens_per_s:.1f},"
+        f"vs {plan.baseline_tokens_per_s:.1f} analytic warm start "
+        f"({plan.trials} trials, {plan.decision}/{plan.category})",
+        f"tuning_admit_ms,{plan.admit_ms:.2f},"
+        f"vs {plan.baseline_admit_ms:.2f} analytic",
+        f"tuning_plan,chunk={plan.prefill_chunk} block={plan.block_size} "
+        f"slots={plan.max_batch} interleave={plan.decode_interleave},"
+        f"fingerprint {plan.fingerprint}",
+        f"tuning_fresh_tokens_per_s,{tuned.tokens_per_s:.1f},"
+        f"vs {untuned.tokens_per_s:.1f} untuned paged "
+        f"(greedy outputs bitwise identical)",
+    ]
+
+
 def run() -> list[str]:
     cfg = C.get_smoke_config(ARCH)
     params = T.init_params(cfg, jax.random.PRNGKey(0))
@@ -196,7 +256,7 @@ def run() -> list[str]:
 
     seq_tps = total_tokens / t_seq
     cb_tps = total_tokens / t_cb
-    sharing_lines = run_sharing(cfg, params)
+    sharing_lines = run_sharing(cfg, params) + run_tuned(cfg, params)
     return [
         f"serving_seq_tokens_per_s,{seq_tps:.1f},"
         f"{N_REQUESTS}req x {PROMPT_LEN}p+{NEW_TOKENS}n sequential",

@@ -35,7 +35,17 @@ def main() -> None:
     ap.add_argument("--interleave", type=int, default=1,
                     help="decode steps per in-flight prefill chunk")
     ap.add_argument("--autotune", action="store_true",
-                    help="pick chunk/interleave via the paper's generic flow")
+                    help="measurement-driven tuning (repro.tuning): profile "
+                         "the live backend, warm-start from the paper's "
+                         "generic flow, coordinate-descend on measured "
+                         "tokens/s, persist the plan to the tuning db")
+    ap.add_argument("--tuning-db", default=None,
+                    help="tuning-db JSON path (default $REPRO_TUNING_DB or "
+                         "~/.cache/repro/tuning.json)")
+    ap.add_argument("--tune-budget", type=int, default=12,
+                    help="max measured candidate runs the tuner may spend")
+    ap.add_argument("--retune", action="store_true",
+                    help="ignore a cached TunedPlan and search afresh")
     ap.add_argument("--sequential", action="store_true",
                     help="force the one-request-at-a-time baseline")
     ap.add_argument("--paged", action="store_true",
@@ -101,14 +111,33 @@ def main() -> None:
         total_new = out.shape[0] * out.shape[1]
         mode = "sequential-batch"
     else:
-        eng = StreamedBatchEngine(cfg, params, scfg)
+        plan = None
         if args.autotune:
-            plan = eng.autotune(args.prompt_len)
-            print(f"[serve] autotune: {plan.decision} "
+            from repro import tuning
+            desc = tuning.WorkloadDescriptor.from_prompts(
+                [np.asarray(tokens[i]) for i in range(b)],
+                max_new_tokens=args.new_tokens)
+            db = tuning.TuningDB(args.tuning_db)
+            fp = tuning.fingerprint(cfg, desc, scfg)
+            plan = None if args.retune else db.get(fp)
+            cached = plan is not None
+            if plan is None:
+                plan = tuning.search_tuned_plan(
+                    cfg, params, scfg, desc,
+                    budget=tuning.SearchBudget(max_trials=args.tune_budget),
+                    log=print)
+                db.put(plan)
+            st = plan.measured_stage_times
+            print(f"[serve] autotune ({'cached' if cached else 'searched'}, "
+                  f"{plan.decision}/{plan.category}): "
                   f"chunk={plan.prefill_chunk} "
                   f"interleave={plan.decode_interleave} "
-                  f"(chunk {plan.stage_times.h2d * 1e3:.2f}ms, "
-                  f"decode {plan.stage_times.kex * 1e3:.2f}ms)")
+                  f"block={plan.block_size} slots={plan.max_batch} "
+                  f"kernel={plan.paged_kernel} "
+                  f"(chunk {st.h2d * 1e3:.2f}ms, decode {st.kex * 1e3:.2f}ms; "
+                  f"{plan.tokens_per_s:.1f} tok/s measured vs "
+                  f"{plan.baseline_tokens_per_s:.1f} analytic; db {db.path})")
+        eng = StreamedBatchEngine(cfg, params, scfg, plan=plan)
         t0 = time.perf_counter()
         uids = [eng.submit(np.asarray(tokens[i])) for i in range(b)]
         outs = eng.run()

@@ -207,16 +207,32 @@ class PrefixRegistry:
                 gone.append(b)
         return gone
 
-    def get(self, tokens: np.ndarray) -> list[int] | None:
+    def get(
+        self, tokens: np.ndarray, *, count: bool = True
+    ) -> list[int] | None:
+        """Exact-length probe.  ``count=False`` leaves the hit/miss counters
+        alone: a longest-match descent (``PagedKVCache.lookup_prefix``)
+        probes many lengths for *one* logical lookup and records the single
+        outcome itself via ``record_lookup`` — counting every failed probe
+        as a miss would drown the hit rate in descent noise."""
         tb = np.ascontiguousarray(tokens).tobytes()
         d = self._digest(tb)
         entry = self._entries.get(d)
         if entry is None or entry[0] != tb:
-            self.misses += 1
+            if count:
+                self.misses += 1
             return None
         self._entries.move_to_end(d)
-        self.hits += 1
+        if count:
+            self.hits += 1
         return list(entry[1])
+
+    def record_lookup(self, hit: bool) -> None:
+        """Count one logical (admission-level) lookup outcome."""
+        if hit:
+            self.hits += 1
+        else:
+            self.misses += 1
 
     def put(
         self, tokens: np.ndarray, blocks: list[int]
@@ -251,6 +267,25 @@ class PrefixRegistry:
         self._entries.clear()
         self._block_use.clear()
         return out
+
+    def drop_stranded(
+        self, align_tokens: int, *, itemsize: int = 4
+    ) -> list[int]:
+        """Drop entries whose token length is not a multiple of
+        ``align_tokens`` — stranded when the prefill chunk changes (e.g.
+        autotune): the chunk-grid-aligned lookup can never probe their
+        lengths again, so they'd only pin pages until pool pressure
+        reclaimed them.  Returns the blocks no surviving entry references
+        (for the caller to free)."""
+        if align_tokens < 1:
+            raise ValueError(
+                f"align_tokens must be >= 1, got {align_tokens}")
+        stranded = [d for d, (tb, _) in self._entries.items()
+                    if (len(tb) // itemsize) % align_tokens]
+        released: list[int] = []
+        for d in stranded:
+            released += self._release(self._entries.pop(d)[1])
+        return released
 
 
 @dataclasses.dataclass(frozen=True)
@@ -301,11 +336,15 @@ class PagedKVCache:
         max_seq: int,
         block_size: int,
         num_blocks: int | None = None,
+        jit_cache_cap: int | None = None,
     ):
         if max_seq % block_size != 0:
             raise ValueError(
                 f"max_seq {max_seq} must be a multiple of block_size "
                 f"{block_size}")
+        if jit_cache_cap is not None and jit_cache_cap < 1:
+            raise ValueError(
+                f"jit_cache_cap must be >= 1, got {jit_cache_cap}")
         self.cfg = cfg
         self.max_batch = max_batch
         self.max_seq = max_seq
@@ -326,6 +365,11 @@ class PagedKVCache:
         self._owned: list[list[int]] = [[] for _ in range(max_batch)]
         self.peak_pages_in_use = 0
         self.cow_forks = 0
+        self.last_lookup_probed = False  # did the newest lookup_prefix
+        # descend at all? (the engine's per-admission counter keys off it)
+        # Per-n_pages compile-cache bound; a tuned plan sizes it to the
+        # distinct admission/evict page counts its geometry actually sees.
+        self._jit_cap = jit_cache_cap if jit_cache_cap else _JIT_CACHE_CAP
         self._scatter_jit: collections.OrderedDict = collections.OrderedDict()
         self._gather_jit: collections.OrderedDict = collections.OrderedDict()
         self._load_jit: collections.OrderedDict = collections.OrderedDict()
@@ -465,7 +509,7 @@ class PagedKVCache:
 
     def lookup_prefix(
         self, tokens: np.ndarray, *, min_pages: int = 1,
-        align_tokens: int = 1,
+        align_tokens: int = 1, count: bool = True,
     ) -> tuple[int, list[int]]:
         """Longest registered page-aligned *proper* prefix of ``tokens``.
 
@@ -473,17 +517,34 @@ class PagedKVCache:
         prefill chunk so the uncovered tail re-runs the exact chunk grid a
         full prefill would (token parity is bitwise, not approximate).
         Returns (n_pages, blocks); (0, []) on miss.
+
+        The whole descent is *one* logical lookup: at most one hit or miss
+        lands on ``registry.hits``/``misses`` per call (failed probes on
+        the way down are not misses — de-noised counters).  ``count=False``
+        records nothing: the admission *gate* re-evaluates the same queued
+        request every scheduling quantum under backpressure, so the engine
+        counts one outcome per admission (in ``_admit``), not per poll.
+        Either way ``last_lookup_probed`` reports whether this call probed
+        at all (a prompt too short for an aligned proper prefix has no
+        outcome worth counting later).
         """
         tokens = np.asarray(tokens, np.int32)
         bs = self.block_size
         max_pages = (len(tokens) - 1) // bs  # proper: >= 1 tail token
+        probed = False
+        hit: tuple[int, list[int]] | None = None
         for n in range(max_pages, max(1, min_pages) - 1, -1):
             if align_tokens > 1 and (n * bs) % align_tokens:
                 continue
-            blocks = self.registry.get(tokens[: n * bs])
+            probed = True
+            blocks = self.registry.get(tokens[: n * bs], count=False)
             if blocks is not None:
-                return n, blocks
-        return 0, []
+                hit = (n, blocks)
+                break
+        self.last_lookup_probed = probed
+        if count and probed:
+            self.registry.record_lookup(hit is not None)
+        return hit if hit is not None else (0, [])
 
     def register_prefix(
         self, tokens: np.ndarray, slot: int, *, min_pages: int = 1,
@@ -528,6 +589,17 @@ class PagedKVCache:
     def clear_prefixes(self) -> None:
         """Drop every registry entry (frees blocks no slot still shares)."""
         self.allocator.free(self.registry.clear())
+
+    def clear_stranded_prefixes(self, align_tokens: int) -> int:
+        """Drop registry entries stranded by a prefill-chunk change: the
+        chunk-grid-aligned lookup only probes multiples of the chunk, so an
+        entry registered under the old grid whose length doesn't land on
+        the new one can never match again — without this it lingers,
+        pinning pages, until pool pressure reclaims it.  Returns how many
+        entries were dropped."""
+        before = len(self.registry)
+        self.allocator.free(self.registry.drop_stranded(align_tokens))
+        return before - len(self.registry)
 
     # -- page scatter / gather / copy (admission, evict, readmit, COW) ---------
 
@@ -613,7 +685,8 @@ class PagedKVCache:
         target = self._owned[slot][start_page:n_total]
         assert all(self.allocator.refcount(p) == 1 for p in target), (
             "scatter into a shared page would corrupt its sharers", target)
-        fn = _lru_jit(self._scatter_jit, n, lambda: self._make_scatter(n))
+        fn = _lru_jit(self._scatter_jit, n, lambda: self._make_scatter(n),
+                      cap=self._jit_cap)
         self.pools = fn(
             self.pools, caches, jnp.asarray(target, jnp.int32),
             jnp.int32(slot), jnp.int32(start_page * self.block_size))
@@ -624,7 +697,8 @@ class PagedKVCache:
         page contents travel with the request)."""
         n = self.pages_for(length)
         assert len(self._owned[slot]) >= n, (slot, length, self._owned[slot])
-        fn = _lru_jit(self._gather_jit, n, lambda: self._make_gather(n))
+        fn = _lru_jit(self._gather_jit, n, lambda: self._make_gather(n),
+                      cap=self._jit_cap)
         pages = jnp.asarray(self._owned[slot][:n], jnp.int32)
         return fn(self.pools, pages, jnp.int32(slot))
 
@@ -634,7 +708,8 @@ class PagedKVCache:
         admission).  Returns the updated cache pytree."""
         n = len(blocks)
         assert n > 0
-        fn = _lru_jit(self._load_jit, n, lambda: self._make_load(n))
+        fn = _lru_jit(self._load_jit, n, lambda: self._make_load(n),
+                      cap=self._jit_cap)
         return fn(self.pools, caches, jnp.asarray(blocks, jnp.int32))
 
     def _copy_block(self, src: int, dst: int) -> None:

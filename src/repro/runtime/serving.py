@@ -106,6 +106,10 @@ class ServeConfig:
     paged_kernel: bool = False  # decode via the Pallas pool kernel (TPU path)
     prefix_sharing: bool = False  # map common prompt prefixes COW (SYNC once)
     prefix_min_pages: int = 1  # shortest prefix worth sharing, in pages
+    # compile-cache bounds; None = module defaults, a TunedPlan sizes them
+    # to its geometry (distinct pos0 offsets / admission page counts)
+    chunk_jit_cap: int | None = None  # per-(len, first, pos0) prefill fns
+    page_jit_cap: int | None = None  # per-n_pages scatter/gather/load fns
 
     def __post_init__(self) -> None:
         if self.max_seq < 1:
@@ -130,6 +134,10 @@ class ServeConfig:
         if self.prefix_min_pages < 1:
             raise ValueError(
                 f"prefix_min_pages must be >= 1, got {self.prefix_min_pages}")
+        for cap in ("chunk_jit_cap", "page_jit_cap"):
+            if getattr(self, cap) is not None and getattr(self, cap) < 1:
+                raise ValueError(
+                    f"{cap} must be >= 1 when set, got {getattr(self, cap)}")
         if self.prefix_sharing and not self.paged:
             raise ValueError(
                 "prefix_sharing shares physical KV pages; it requires "
@@ -158,6 +166,7 @@ class ServingEngine:
         self.scfg = scfg
         self._sample_jit: dict[float, Any] = {}
         self._chunk_jit: collections.OrderedDict = collections.OrderedDict()
+        self._chunk_jit_cap = scfg.chunk_jit_cap or _CHUNK_JIT_CAP
 
     def _decode_sample_fn(self, temperature: float):
         """Jitted decode step with on-device sampling fused in (one compile
@@ -213,7 +222,7 @@ class ServingEngine:
 
             return jax.jit(fn)
 
-        return _lru_jit(self._chunk_jit, key, make, cap=_CHUNK_JIT_CAP)
+        return _lru_jit(self._chunk_jit, key, make, cap=self._chunk_jit_cap)
 
     def prefill_streamed(
         self, tokens: jax.Array, *, enc_inputs=None, prefix_embeds=None
@@ -466,7 +475,14 @@ class StreamedBatchEngine:
     request.
     """
 
-    def __init__(self, cfg: ModelConfig, params: Any, scfg: ServeConfig):
+    def __init__(self, cfg: ModelConfig, params: Any, scfg: ServeConfig,
+                 *, plan: Any = None):
+        # A TunedPlan (repro.tuning.db) — or anything with its ``apply``
+        # contract — rewrites the streaming knobs (chunk, interleave, page
+        # geometry, slot count, kernel path, compile-cache caps) before the
+        # engine builds; duck-typed so the runtime never imports the tuner.
+        if plan is not None:
+            scfg = plan.apply(scfg)
         if cfg.is_encoder_decoder or cfg.prefix_len > 0:
             raise NotImplementedError(
                 "continuous batching currently serves text-only requests; "
@@ -488,7 +504,8 @@ class StreamedBatchEngine:
         if self.paged:
             self.kv = PagedKVCache(
                 cfg, max_batch=b, max_seq=scfg.max_seq,
-                block_size=scfg.block_size, num_blocks=scfg.num_blocks)
+                block_size=scfg.block_size, num_blocks=scfg.num_blocks,
+                jit_cache_cap=scfg.page_jit_cap)
             self.caches = None  # KV lives in self.kv.pools
         else:
             self.kv = None
@@ -511,9 +528,15 @@ class StreamedBatchEngine:
         # of prefill chunks, which is exactly what prefix sharing cuts.
         self.prefix_hits = 0  # admissions that mapped a shared prefix
         self.prefix_pages_shared = 0  # pages mapped instead of prefilled
-        self._gate_match: tuple[int, int, list[int]] | None = None  # the
-        # admission gate's prefix match, handed to _admit (avoids a second
-        # lookup; valid because nothing runs between gate and admission)
+        self.last_stage_times: rmetric.StageTimes | None = None  # newest
+        # measure_stage_times probe — retained (not discarded after
+        # planning) so callers (an online re-tuner, dashboards) can read
+        # the measurement a decision was based on without re-probing
+        self.last_plan: ServingPlan | None = None  # newest autotune plan
+        self._gate_match: tuple[int, int, list[int], bool] | None = None
+        # the admission gate's prefix match (uid, n_pages, blocks, probed),
+        # handed to _admit (avoids a second lookup; valid because nothing
+        # runs between gate and admission)
 
         # Decode step with on-device sampling fused in: a tick moves one
         # int32 per slot to the host, never the (B, vocab) logits.  With
@@ -627,10 +650,15 @@ class StreamedBatchEngine:
         if self.paged:
             if self.scfg.prefix_sharing:
                 if self._gate_match and self._gate_match[0] == req.uid:
-                    _, shared_pages, blocks = self._gate_match
+                    _, shared_pages, blocks, probed = self._gate_match
                 else:  # direct _admit call (tests): no gate ran
-                    shared_pages, blocks = self._lookup_prefix(req)
+                    shared_pages, blocks, probed = self._lookup_prefix(req)
                 self._gate_match = None
+                # One counted outcome per admission (the gate's repeated
+                # polls are uncounted) — and none for prompts the descent
+                # never probed (too short for an aligned proper prefix).
+                if probed:
+                    self.kv.registry.record_lookup(bool(shared_pages))
                 if shared_pages:
                     self.kv.map_shared(slot.index, blocks)
                     self.prefix_hits += 1
@@ -708,16 +736,22 @@ class StreamedBatchEngine:
         self.preemptions += 1
         return True
 
-    def _lookup_prefix(self, req: Request) -> tuple[int, list[int]]:
-        """Shared-prefix match for ``req`` ((0, []) without sharing or on
-        miss).  The lookup also LRU-bumps the matched entry, protecting it
-        from the reclaim the admission gate may run next."""
+    def _lookup_prefix(self, req: Request) -> tuple[int, list[int], bool]:
+        """Shared-prefix match for ``req`` -> (n_pages, blocks, probed);
+        (0, [], False) without sharing.  The lookup also LRU-bumps the
+        matched entry, protecting it from the reclaim the admission gate
+        may run next.  Uncounted (``count=False``): the gate re-runs it
+        every scheduling quantum a backpressured request waits, so the
+        single hit-or-miss per admission is recorded in ``_admit`` instead
+        (``probed`` rides along so a prompt the descent never probed —
+        too short for an aligned proper prefix — records nothing)."""
         if not (self.paged and self.scfg.prefix_sharing):
-            return 0, []
+            return 0, [], False
         chunk = min(self.scfg.prefill_chunk, len(req.tokens))
-        return self.kv.lookup_prefix(
+        n, blocks = self.kv.lookup_prefix(
             req.tokens, min_pages=self.scfg.prefix_min_pages,
-            align_tokens=chunk)
+            align_tokens=chunk, count=False)
+        return n, blocks, self.kv.last_lookup_probed
 
     def _admission_fits(self, req: Request) -> bool:
         """Admission gate: can ``req`` take a slot right now?  Counts pages
@@ -728,9 +762,9 @@ class StreamedBatchEngine:
         for ``_admit`` so the admission doesn't repeat the lookup."""
         full = self.kv.pages_for(len(req.tokens) + 1)
         for _ in range(3):  # match -> reclaim -> match-dropped converges
-            n, blocks = self._lookup_prefix(req)
+            n, blocks, probed = self._lookup_prefix(req)
             if full - n <= self.kv.free_pages:
-                self._gate_match = (req.uid, n, blocks)
+                self._gate_match = (req.uid, n, blocks, probed)
                 return True
             if not self.kv.reclaim_for(full - n):
                 return False
@@ -936,7 +970,8 @@ class StreamedBatchEngine:
         nxt, _ = self._decode_jit(*args)
         jax.block_until_ready(nxt)
         t_decode = time.perf_counter() - t0
-        return rmetric.StageTimes(h2d=t_chunk, kex=t_decode)
+        self.last_stage_times = rmetric.StageTimes(h2d=t_chunk, kex=t_decode)
+        return self.last_stage_times
 
     def autotune(self, prompt_len: int) -> ServingPlan:
         """Measure stage times and apply the planned chunk/interleave (and,
@@ -946,8 +981,15 @@ class StreamedBatchEngine:
         plan = plan_decode_policy(
             self.measure_stage_times(prompt_len), prompt_len=prompt_len,
             max_seq=self.scfg.max_seq)
+        self.last_plan = plan  # keep the plan (and its stage times) readable
+        chunk_changed = plan.prefill_chunk != self.scfg.prefill_chunk
         self.scfg.prefill_chunk = plan.prefill_chunk
         self.scfg.decode_interleave = plan.decode_interleave
+        if chunk_changed and self.paged and self.scfg.prefix_sharing:
+            # Registry entries aligned to the old chunk grid can never
+            # match a lookup on the new one: drop them now instead of
+            # letting them pin pages until pool pressure reclaims them.
+            self.kv.clear_stranded_prefixes(self.scfg.prefill_chunk)
         if (self.paged and plan.block_size != self.scfg.block_size
                 and not self.active_slots and self._evicted_out == 0
                 and len(self.kv.registry)):

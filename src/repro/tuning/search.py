@@ -1,0 +1,294 @@
+"""Bounded measured search over the streaming knobs.
+
+The paper's generic flow (§6) prices streaming analytically; its follow-on
+work (Zhang et al., 1802.02760 / 2003.04294) shows the knobs are workload-
+and machine-dependent enough to need measurement.  This search keeps the
+analytic flow as the *prior* and measurement as the *judge*:
+
+  * the warm start is ``plan_decode_policy`` fed with *calibrated* stage
+    times from ``tuning.profiler`` — the R gate and ``optimal_streams``
+    pick the neighborhood the search explores, so the budget is spent
+    refining a good guess, not scanning a grid;
+  * the workload classifier (``tuning.workload``) short-circuits
+    non-streamable shapes to the single-stream path (one-shot prefill, no
+    interleave) before any chunk candidate is paid for;
+  * every candidate is a real engine run (``measure_workload``) scored by
+    measured tokens/s (admission latency joins the score for open-arrival
+    workloads), and its greedy outputs must be bitwise identical to the
+    untuned path — a candidate that changes tokens is rejected outright,
+    so a ``TunedPlan`` can never trade correctness for speed;
+  * coordinate descent over one knob at a time, bounded by
+    ``SearchBudget.max_trials`` engine measurements, with a memo so a
+    revisited assignment costs nothing.
+
+The untuned base config and the analytic warm start are themselves scored
+candidates, so the returned plan's measured tokens/s is >= both by
+construction.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import numpy as np
+
+from repro.runtime.serving import StreamedBatchEngine, plan_decode_policy
+from repro.tuning import profiler as prof
+from repro.tuning.db import TunedPlan, fingerprint
+from repro.tuning.workload import WorkloadDescriptor, classify_workload
+
+#: Knob sweep order: granularity knobs first (they dominate per Zhang et
+#: al.), resource knobs after, binary kernel/registry knobs last.
+_DIMS = ("prefill_chunk", "block_size", "num_blocks", "max_batch",
+         "decode_interleave", "paged_kernel", "prefix_min_pages")
+
+_MIN_CHUNK = 16
+
+
+@dataclasses.dataclass(frozen=True)
+class SearchBudget:
+    """Caps on what the search may spend (one trial = one measured engine
+    run, warmup included)."""
+
+    max_trials: int = 12
+    sweeps: int = 2  # coordinate-descent passes over the knob list
+    profile_repeats: int = 2  # per-stage probe repeats (median)
+    timed_runs: int = 3  # timed workload repeats per candidate (median)
+    margin: float = 0.03  # relative score gap a challenger must clear —
+    # hysteresis so measurement jitter can't flip the incumbent
+
+    def __post_init__(self) -> None:
+        if (self.max_trials < 1 or self.sweeps < 1
+                or self.profile_repeats < 1 or self.timed_runs < 1):
+            raise ValueError(f"budget fields must be >= 1, got {self}")
+        if self.margin < 0.0:
+            raise ValueError(f"margin must be >= 0, got {self.margin}")
+
+
+def _pow2_neighbors(value: int, lo: int, hi: int) -> list[int]:
+    cands = {value, max(lo, value // 2), min(hi, value * 2)}
+    return sorted(v for v in cands if lo <= v <= hi)
+
+
+def _candidates(
+    dim: str, asg: dict, scfg, desc: WorkloadDescriptor, *,
+    streamable: bool, backend: str,
+) -> list[Any]:
+    """Neighborhood of the current assignment along one knob."""
+    cur = asg[dim]
+    if dim == "prefill_chunk":
+        if not streamable:
+            return [cur]  # pinned to one-shot by the classifier
+        hi = min(scfg.max_seq, max(_MIN_CHUNK, desc.prompt_len_max))
+        return sorted(set(_pow2_neighbors(cur, _MIN_CHUNK, hi)) | {hi})
+    if dim == "decode_interleave":
+        if not streamable:
+            return [cur]
+        return sorted({max(1, cur - 1), cur, cur + 1})
+    if dim == "block_size":
+        if not scfg.paged:
+            return [cur]
+        cands = _pow2_neighbors(cur, 4, scfg.max_seq)
+        return [b for b in cands if scfg.max_seq % b == 0] or [cur]
+    if dim == "num_blocks":
+        if not scfg.paged or cur is None:
+            return [cur]  # None = contiguous-parity pool; nothing to shrink
+        worst = -(-(desc.prompt_len_max + desc.max_new_tokens)
+                  // asg["block_size"]) + 1
+        cands = {cur, max(worst + 1, 3 * cur // 4), max(worst + 1, cur // 2)}
+        return sorted(c for c in cands if c >= 2)
+    if dim == "max_batch":
+        hi = max(1, min(desc.n_requests, 2 * cur))
+        return sorted({max(1, cur // 2), cur, hi})
+    if dim == "paged_kernel":
+        if scfg.paged and backend == "tpu":
+            return [False, True]
+        return [cur]
+    if dim == "prefix_min_pages":
+        if scfg.paged and scfg.prefix_sharing:
+            return sorted({1, 2, cur})
+        return [cur]
+    raise KeyError(dim)
+
+
+def _serve_config(scfg, asg: dict):
+    return dataclasses.replace(
+        scfg,
+        prefill_chunk=asg["prefill_chunk"],
+        decode_interleave=asg["decode_interleave"],
+        block_size=asg["block_size"],
+        num_blocks=asg["num_blocks"],
+        max_batch=asg["max_batch"],
+        paged_kernel=asg["paged_kernel"],
+        prefix_min_pages=asg["prefix_min_pages"])
+
+
+def search_tuned_plan(
+    cfg, params, scfg, desc: WorkloadDescriptor, *,
+    budget: SearchBudget = SearchBudget(), seed: int = 0,
+    admit_weight: float | None = None, log=None,
+) -> TunedPlan:
+    """Measure-and-descend to a ``TunedPlan`` for (``cfg``, ``desc``).
+
+    ``scfg`` is the untuned base configuration: it fixes the workload
+    policy (``max_seq``, temperature, sharing on/off) and is both the
+    parity reference and the first scored candidate.  ``admit_weight``
+    (tokens/s forfeited per ms of admission latency) defaults by arrival
+    pattern: 0 for a closed batch, a small weight for open arrivals.
+    """
+    say = log or (lambda msg: None)
+    backend = jax.default_backend()
+    if admit_weight is None:
+        admit_weight = 0.05 if desc.arrival == "open" else 0.0
+
+    # -- calibrate + warm start (the analytic flow as prior) ------------------
+    probe = StreamedBatchEngine(cfg, params, dataclasses.replace(scfg))
+    profile = prof.profile_engine(
+        probe, desc.prompt_len_mean, repeats=budget.profile_repeats)
+    stage_times = profile.stage_times()
+    analytic = plan_decode_policy(
+        stage_times, prompt_len=desc.prompt_len_mean, max_seq=scfg.max_seq)
+    category = classify_workload(
+        desc, prefill_chunk=analytic.prefill_chunk,
+        prefix_staged=scfg.prefix_sharing)
+    streamable = category.streamable
+    say(f"[tune] calibrated chunk={profile.chunk_s * 1e3:.2f}ms "
+        f"decode={profile.decode_s * 1e3:.2f}ms -> {analytic.decision}, "
+        f"workload {category.value}"
+        f"{'' if streamable else ' (single-stream short-circuit)'}")
+
+    def assignment(chunk, interleave, block):
+        return {
+            "prefill_chunk": chunk,
+            "decode_interleave": interleave,
+            "block_size": block,
+            "num_blocks": scfg.num_blocks,
+            "max_batch": scfg.max_batch,
+            "paged_kernel": scfg.paged_kernel,
+            "prefix_min_pages": scfg.prefix_min_pages,
+        }
+
+    untuned = assignment(
+        scfg.prefill_chunk, scfg.decode_interleave, scfg.block_size)
+    if streamable:
+        start = assignment(
+            analytic.prefill_chunk, analytic.decode_interleave,
+            analytic.block_size if scfg.paged else scfg.block_size)
+    else:
+        # Non-streamable shape: one-shot prefill, no interleave (§4.1).
+        start = assignment(
+            min(scfg.max_seq, max(_MIN_CHUNK, desc.prompt_len_max)), 1,
+            analytic.block_size if scfg.paged else scfg.block_size)
+    if scfg.paged and scfg.max_seq % start["block_size"] != 0:
+        start["block_size"] = untuned["block_size"]
+
+    # -- measured scoring with a bitwise-parity guard -------------------------
+    memo: dict[tuple, prof.WorkloadMeasurement | None] = {}
+    trials = 0
+
+    def key(asg: dict) -> tuple:
+        return tuple(asg[d] for d in _DIMS)
+
+    def measure(asg: dict) -> prof.WorkloadMeasurement | None:
+        nonlocal trials
+        k = key(asg)
+        if k in memo:
+            return memo[k]
+        if trials >= budget.max_trials:
+            return None
+        try:
+            sc = _serve_config(scfg, asg)
+            m = prof.measure_workload(
+                lambda: StreamedBatchEngine(cfg, params, sc), desc,
+                vocab_size=cfg.vocab_size, seed=seed,
+                timed_runs=budget.timed_runs)
+        except (ValueError, RuntimeError, NotImplementedError) as e:
+            say(f"[tune] rejected {k}: {e}")
+            memo[k] = None
+            return None
+        trials += 1
+        memo[k] = m
+        return m
+
+    ref = measure(untuned)
+    assert ref is not None, "the untuned base config must be measurable"
+
+    def parity_ok(m: prof.WorkloadMeasurement) -> bool:
+        return all(np.array_equal(m.outputs[i], ref.outputs[i])
+                   for i in ref.outputs)
+
+    def score(m: prof.WorkloadMeasurement | None) -> float:
+        if m is None or not parity_ok(m):
+            return -np.inf  # never trade tokens for speed
+        return m.score(admit_weight=admit_weight)
+
+    def beats(m, incumbent) -> bool:
+        """Challenger must clear the incumbent by the hysteresis margin."""
+        s, si = score(m), score(incumbent)
+        return s > si + budget.margin * abs(si)
+
+    best_asg, best_m = dict(untuned), ref
+    base_m = measure(start)  # the analytic warm start, scored
+    if beats(base_m, best_m):
+        best_asg, best_m = dict(start), base_m
+    # The recorded baseline is the analytic start when it measured validly,
+    # else the untuned reference; its assignment travels with it so a later
+    # promotion can never pair start's knobs with ref's measurements.
+    if base_m is not None and parity_ok(base_m):
+        baseline, baseline_asg = base_m, dict(start)
+    else:
+        baseline, baseline_asg = ref, dict(untuned)
+
+    # -- coordinate descent ---------------------------------------------------
+    for _ in range(budget.sweeps):
+        improved = False
+        for dim in _DIMS:
+            for cand in _candidates(
+                    dim, best_asg, scfg, desc, streamable=streamable,
+                    backend=backend):
+                if cand == best_asg[dim]:
+                    continue
+                trial = dict(best_asg)
+                trial[dim] = cand
+                m = measure(trial)
+                if beats(m, best_m):
+                    say(f"[tune] {dim}={cand}: "
+                        f"{m.tokens_per_s:.1f} tok/s > "
+                        f"{best_m.tokens_per_s:.1f}")
+                    best_asg, best_m = trial, m
+                    improved = True
+            if trials >= budget.max_trials:
+                break
+        if not improved or trials >= budget.max_trials:
+            break
+
+    if baseline.tokens_per_s > best_m.tokens_per_s:
+        # The hysteresis margin kept an incumbent the baseline nominally
+        # outmeasured; promote the baseline's own assignment so the
+        # returned plan is never worse than its recorded baseline.
+        best_asg, best_m = dict(baseline_asg), baseline
+    say(f"[tune] best {best_m.tokens_per_s:.1f} tok/s "
+        f"(analytic baseline {baseline.tokens_per_s:.1f}) "
+        f"after {trials} trials")
+    return TunedPlan(
+        fingerprint=fingerprint(cfg, desc, scfg),
+        prefill_chunk=best_asg["prefill_chunk"],
+        decode_interleave=best_asg["decode_interleave"],
+        block_size=best_asg["block_size"],
+        num_blocks=best_asg["num_blocks"],
+        max_batch=best_asg["max_batch"],
+        paged=scfg.paged,
+        paged_kernel=best_asg["paged_kernel"],
+        prefix_min_pages=best_asg["prefix_min_pages"],
+        tokens_per_s=best_m.tokens_per_s,
+        admit_ms=best_m.admit_ms,
+        baseline_tokens_per_s=baseline.tokens_per_s,
+        baseline_admit_ms=baseline.admit_ms,
+        stage_times=(stage_times.h2d, stage_times.kex, stage_times.d2h),
+        decision=analytic.decision,
+        category=category.value,
+        max_seq=scfg.max_seq,
+        trials=trials,
+        source="measured")

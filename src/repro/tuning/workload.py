@@ -1,0 +1,228 @@
+"""Workload descriptors and their dependency-category classification.
+
+A ``WorkloadDescriptor`` is the tuner's unit of generalization: two serving
+runs with the same descriptor bucket are assumed to want the same knobs, so
+tuned plans are cached per (platform, model, bucket) — see ``tuning.db``.
+
+The classifier maps a descriptor onto the paper's five dependency
+categories (§4.1, ``core.dependency``) by building the task graph the
+serving engine actually executes:
+
+  * one concurrent request, one prefill chunk  -> SYNC (nothing overlaps);
+  * one request, many chunks                   -> TRUE_DEPENDENT (the
+    chunked-prefill RAW chain through the KV cache — NW-style wavefront);
+  * decode-dominated                           -> ITERATIVE (the decode
+    kernel re-runs many times on device-resident KV per prefill task;
+    overlapping only the prefill is negligible amortized);
+  * concurrent requests, no shared data        -> INDEPENDENT;
+  * a shared prompt prefix read by every task  -> SYNC by the paper's
+    letter, but the engine applies the paper's own FALSE_DEPENDENT move
+    (redundant per-admission transfer, or staged-once via the prefix
+    registry), so the workload *reduces* to FALSE_DEPENDENT — unless the
+    prefix dominates the prompt, the lavaMD regime (§5) where the shared
+    bytes ~= the payload bytes and streaming the leftover tails loses.
+
+Non-streamable categories short-circuit the tuner's chunk/interleave search
+to the single-stream path (one-shot prefill, no interleaving).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core import dependency as dep
+
+#: Shared-prefix fraction at or above which the prefix *dominates* the
+#: transfer: redundant copy / staged-once tails leave nothing worth
+#: streaming (the paper's lavaMD halo~=payload counterexample, §5).
+SHARE_DOMINANT = 0.9
+
+#: Model at most this many request tasks; category is invariant beyond it.
+_MAX_MODEL_TASKS = 8
+
+
+@dataclasses.dataclass(frozen=True)
+class WorkloadDescriptor:
+    """Shape of a serving workload, as the tuner generalizes over it.
+
+    ``arrival`` distinguishes a closed batch ("batch": all requests present
+    at t=0, drain to empty) from an open stream ("open": steady trickle);
+    admission latency matters more for the latter.
+    """
+
+    prompt_len_mean: int
+    prompt_len_max: int
+    max_new_tokens: int
+    n_requests: int
+    shared_prefix_fraction: float = 0.0  # of prompt_len_mean, in [0, 1]
+    arrival: str = "batch"  # "batch" | "open"
+
+    def __post_init__(self) -> None:
+        if self.prompt_len_mean < 1 or self.prompt_len_max < 1:
+            raise ValueError(
+                f"prompt lengths must be >= 1, got mean="
+                f"{self.prompt_len_mean} max={self.prompt_len_max}")
+        if self.prompt_len_max < self.prompt_len_mean:
+            raise ValueError(
+                f"prompt_len_max {self.prompt_len_max} < mean "
+                f"{self.prompt_len_mean}")
+        if self.max_new_tokens < 1:
+            raise ValueError(
+                f"max_new_tokens must be >= 1, got {self.max_new_tokens}")
+        if self.n_requests < 1:
+            raise ValueError(
+                f"n_requests must be >= 1, got {self.n_requests}")
+        if not 0.0 <= self.shared_prefix_fraction <= 1.0:
+            raise ValueError(
+                f"shared_prefix_fraction must be in [0, 1], got "
+                f"{self.shared_prefix_fraction}")
+        if self.arrival not in ("batch", "open"):
+            raise ValueError(
+                f"arrival must be 'batch' or 'open', got {self.arrival!r}")
+
+    @property
+    def shared_prefix_len(self) -> int:
+        return int(round(self.shared_prefix_fraction * self.prompt_len_mean))
+
+    @staticmethod
+    def from_prompts(
+        prompts: list[np.ndarray], *, max_new_tokens: int,
+        arrival: str = "batch",
+    ) -> "WorkloadDescriptor":
+        """Describe a concrete request list (longest common prefix measured
+        across all prompts — the registry's sharing opportunity)."""
+        if not prompts:
+            raise ValueError("need at least one prompt")
+        lens = [len(p) for p in prompts]
+        mean = max(1, int(round(float(np.mean(lens)))))
+        shared = 0
+        if len(prompts) > 1:
+            limit = min(lens)
+            first = np.asarray(prompts[0][:limit])
+            agree = np.ones(limit, bool)
+            for p in prompts[1:]:
+                agree &= np.asarray(p[:limit]) == first
+            shared = int(np.argmin(agree)) if not agree.all() else limit
+        return WorkloadDescriptor(
+            prompt_len_mean=mean, prompt_len_max=max(lens),
+            max_new_tokens=max_new_tokens, n_requests=len(prompts),
+            shared_prefix_fraction=min(1.0, shared / mean),
+            arrival=arrival)
+
+    # -- bucketing (the tuning-db key coarsening) -----------------------------
+
+    def bucket(self) -> dict:
+        """Coarsened descriptor: the tuning-db groups workloads whose knobs
+        should agree.  Lengths snap to powers of two, the shared fraction to
+        quarters, the request count to a small geometric ladder."""
+
+        def pow2(n: int) -> int:
+            return 1 << max(0, int(n - 1).bit_length())
+
+        def ladder(n: int) -> int:
+            for cap in (1, 2, 4, 8, 16):
+                if n <= cap:
+                    return cap
+            return 32
+
+        return {
+            "prompt_mean": pow2(self.prompt_len_mean),
+            "prompt_max": pow2(self.prompt_len_max),
+            "new_tokens": pow2(self.max_new_tokens),
+            "requests": ladder(self.n_requests),
+            "shared": round(self.shared_prefix_fraction * 4) / 4,
+            "arrival": self.arrival,
+        }
+
+
+def synth_prompts(
+    desc: WorkloadDescriptor, *, vocab_size: int, seed: int = 0,
+) -> list[np.ndarray]:
+    """Deterministic synthetic request list matching ``desc``: lengths
+    spread uniformly in [mean, max] (mean first, so a single-request probe
+    is the mean), sharing the descriptor's common prefix."""
+    rng = np.random.default_rng(seed)
+    shared_len = desc.shared_prefix_len
+    prefix = rng.integers(0, vocab_size, shared_len, dtype=np.int32)
+    prompts = []
+    for i in range(desc.n_requests):
+        if desc.n_requests > 1:
+            frac = i / (desc.n_requests - 1)
+            length = int(round(desc.prompt_len_mean
+                               + frac * (desc.prompt_len_max
+                                         - desc.prompt_len_mean)))
+        else:
+            length = desc.prompt_len_mean
+        # tail may be empty (shared_prefix_fraction = 1.0 covers the whole
+        # mean-length prompt); the prompt length must match the descriptor
+        # exactly, or a max_seq sized to prompt_len_max rejects the submit
+        tail = rng.integers(
+            0, vocab_size, max(0, length - shared_len), dtype=np.int32)
+        prompts.append(np.concatenate([prefix, tail]).astype(np.int32))
+    return prompts
+
+
+def to_task_graph(
+    desc: WorkloadDescriptor, *, prefill_chunk: int,
+    prefix_staged: bool = False,
+) -> dep.Workload:
+    """The dependency graph the serving engine executes for ``desc``.
+
+    Concurrent requests are the tasks (Independent by default); a shared
+    prompt prefix is a region every task reads; with ``prefix_staged`` (the
+    prefix registry maps it once) it leaves the per-task read sets.  A
+    single request decomposes into its prefill-chunk RAW chain instead.
+    ``kernel_iterations`` is the decode-steps-per-prefill-task ratio: when
+    decode re-runs many times on resident KV per prefill task, the workload
+    is the paper's Iterative pattern.
+    """
+    if prefill_chunk < 1:
+        raise ValueError(f"prefill_chunk must be >= 1, got {prefill_chunk}")
+    n_chunks = -(-desc.prompt_len_mean // prefill_chunk)
+    if desc.n_requests == 1:
+        if n_chunks <= 1:
+            tasks = [dep.Task.make("req0", reads=["prompt[0]"],
+                                   writes=["out[0]"])]
+            return dep.Workload("serve-single", tasks)
+        # Chunked prefill: chunk t reads the KV that chunk t-1 wrote (the
+        # RAW handoff of §4.2) — NW-style True dependence, streamable.
+        tasks = [dep.Task.make("chunk0", reads=["prompt[0]"],
+                               writes=["kv[0]"])]
+        for t in range(1, min(n_chunks, _MAX_MODEL_TASKS)):
+            tasks.append(dep.Task.make(
+                f"chunk{t}", reads=[f"prompt[{t}]", f"kv[{t - 1}]"],
+                writes=[f"kv[{t}]"]))
+        return dep.Workload("serve-chunked-prefill", tasks)
+    shared = desc.shared_prefix_fraction > 0.0 and not prefix_staged
+    tasks = []
+    for i in range(min(desc.n_requests, _MAX_MODEL_TASKS)):
+        reads = {f"prompt[{i}]"}
+        if shared:
+            reads.add("prefix")
+        tasks.append(dep.Task.make(f"req{i}", reads=reads,
+                                   writes=[f"out[{i}]"]))
+    return dep.Workload(
+        "serve-batch", tasks,
+        kernel_iterations=max(1, round(desc.max_new_tokens / n_chunks)))
+
+
+def classify_workload(
+    desc: WorkloadDescriptor, *, prefill_chunk: int,
+    prefix_staged: bool = False,
+) -> dep.Category:
+    """Map ``desc`` onto the paper's five categories (§4.1).
+
+    A SYNC verdict from a *non-dominant* shared prefix is reduced to
+    FALSE_DEPENDENT: the engine applies the paper's redundant-transfer move
+    (each admission prefills its own prefix copy) or stages it once
+    (``prefix_sharing``), so only a dominant prefix — the halo~=payload
+    lavaMD regime — stays non-streamable.
+    """
+    cat = dep.classify(to_task_graph(
+        desc, prefill_chunk=prefill_chunk, prefix_staged=prefix_staged))
+    if (cat is dep.Category.SYNC and desc.n_requests > 1
+            and 0.0 < desc.shared_prefix_fraction < SHARE_DOMINANT):
+        return dep.Category.FALSE_DEPENDENT
+    return cat

@@ -438,3 +438,84 @@ class TestEvictReadmit:
         assert eng.kv.free_pages < eng.kv.pages_for(ev.cur)
         with pytest.raises(RuntimeError):
             eng.readmit(ev)
+
+
+class TestPrefixRegistryCounters:
+    """De-noised hit/miss accounting: the longest-match descent is one
+    logical lookup, so exactly one hit *or* miss lands per admission-level
+    ``lookup_prefix`` call — failed probes on the way down are not misses."""
+
+    def _kv(self, cfg):
+        return PagedKVCache(cfg, max_batch=2, max_seq=64, block_size=8)
+
+    def test_one_outcome_per_lookup(self, served):
+        cfg, _ = served
+        kv = self._kv(cfg)
+        tokens = np.arange(40, dtype=np.int32)
+        assert kv.alloc(0, 40)
+        kv.register_prefix(tokens, 0, align_tokens=8)  # lengths 8..40
+        # Query sharing only the first 16 tokens: the descent probes 40,
+        # 32, 24 (failing) before the 16-token hit — one hit, zero misses.
+        query = np.concatenate([tokens[:16], 1000 + np.arange(25)])
+        query = query.astype(np.int32)
+        n, blocks = kv.lookup_prefix(query, align_tokens=8)
+        assert n == 2 and len(blocks) == 2
+        assert (kv.registry.hits, kv.registry.misses) == (1, 0)
+        # A fully foreign prompt probes several lengths: one miss, not many.
+        miss = (2000 + np.arange(20)).astype(np.int32)
+        assert kv.lookup_prefix(miss, align_tokens=8) == (0, [])
+        assert (kv.registry.hits, kv.registry.misses) == (1, 1)
+        # A sub-page prompt makes no probe at all: no outcome recorded.
+        assert kv.lookup_prefix(miss[:4], align_tokens=4) == (0, [])
+        assert (kv.registry.hits, kv.registry.misses) == (1, 1)
+
+    def test_direct_get_still_counts(self, served):
+        """The exact-length probe keeps its counting default for direct
+        callers; only the descent opts out."""
+        cfg, _ = served
+        kv = self._kv(cfg)
+        assert kv.registry.get(np.arange(8, dtype=np.int32)) is None
+        assert kv.registry.misses == 1
+        assert kv.registry.get(np.arange(8, dtype=np.int32),
+                               count=False) is None
+        assert kv.registry.misses == 1
+
+    def test_clear_stranded_prefixes(self, served):
+        """Entries whose length falls off a new chunk grid are dropped and
+        their (otherwise unreferenced) pages freed."""
+        cfg, _ = served
+        kv = self._kv(cfg)
+        tokens = np.arange(24, dtype=np.int32)
+        assert kv.alloc(0, 24)
+        kv.register_prefix(tokens, 0, align_tokens=8)  # lengths 8, 16, 24
+        assert len(kv.registry) == 3 and kv.registry.blocks_held == 3
+        dropped = kv.clear_stranded_prefixes(16)  # 8 and 24 are stranded
+        assert dropped == 2
+        assert len(kv.registry) == 1 and kv.registry.blocks_held == 2
+        # the surviving 16-token entry still matches on the new grid
+        query = np.concatenate([tokens, [99]]).astype(np.int32)
+        n, _ = kv.lookup_prefix(query, align_tokens=16)
+        assert n == 2
+        # slot 0 still owns its pages; dropping its refs frees everything
+        kv.release(0)
+        kv.clear_prefixes()
+        assert kv.pages_in_use == 0
+
+    def test_backpressured_admission_counts_once(self, served):
+        """The admission gate re-evaluates a waiting request every
+        scheduling quantum; those polls must not touch the counters — one
+        outcome lands per *admission*, however long the wait was."""
+        cfg, params = served
+        eng = StreamedBatchEngine(cfg, params, ServeConfig(
+            max_seq=64, prefill_chunk=16, max_new_tokens=4, max_batch=2,
+            paged=True, block_size=16, num_blocks=4, prefix_sharing=True))
+        grab = eng.kv.allocator.alloc(1)  # needs 3 of 3 usable pages
+        eng.submit(np.arange(32, dtype=np.int32))
+        for _ in range(5):
+            eng.step()  # gate polls and holds the request each quantum
+        assert len(eng.queue) == 1
+        reg = eng.kv.registry
+        assert (reg.hits, reg.misses) == (0, 0), "polls are not outcomes"
+        eng.kv.allocator.free(grab)
+        eng.run()
+        assert (reg.hits, reg.misses) == (0, 1)  # one miss, once admitted
