@@ -26,6 +26,15 @@ The tuning section (``run_tuned``) runs the measurement-driven tuner
 measured tokens/s on the same workload — the A/B every future perf PR can
 be judged against.  Acceptance: tuned >= analytic, greedy outputs bitwise
 identical to the untuned paged path.
+
+The speculative-decode section (``run_spec``) runs a lookup-friendly
+workload — repetitive prompts and generations long enough for greedy
+decode to settle into its cycle, the regime where the n-gram drafter's
+proposals track the target — with ``spec_decode`` on and off.  It reports
+the draft acceptance rate, proposed-vs-accepted counts, verify steps vs
+plain decode steps, and decode tokens/s for both.  The acceptance bar:
+token parity (always), strictly fewer decode steps, and a tokens/s win
+(wall-clock, asserted only with ``strict``).
 """
 
 from __future__ import annotations
@@ -191,6 +200,79 @@ def run_tuned(
     ]
 
 
+def run_spec(
+    cfg=None, params=None, *, n_requests: int = 4, pattern_len: int = 8,
+    pattern_reps: int = 4, new_tokens: int = 64, spec_k: int = 4,
+    max_batch: int = 4, strict: bool = True,
+) -> list[str]:
+    """Speculative-decode A/B on a lookup-friendly workload.
+
+    Prompts are a tiled token pattern (distinct last token per request) and
+    generations are long enough for greedy decode to enter its repeating
+    cycle — the regime prompt-lookup drafting wins.  Asserts greedy token
+    parity and strictly fewer decode steps with speculation on; the
+    wall-clock tokens/s comparison is asserted only with ``strict`` (the
+    pytest smoke disables it to stay deterministic under CI load)."""
+    if cfg is None:
+        cfg = C.get_smoke_config(ARCH)
+        params = T.init_params(cfg, jax.random.PRNGKey(0))
+    pattern = np.asarray(jax.random.randint(
+        jax.random.PRNGKey(9), (pattern_len,), 0, cfg.vocab_size))
+    prompts = []
+    for i in range(n_requests):
+        p = np.tile(pattern, pattern_reps).astype(np.int32)
+        p[-1] = (p[-1] + i) % cfg.vocab_size  # distinct requests
+        prompts.append(p)
+    prompt_len = pattern_len * pattern_reps
+    max_seq = -(-(prompt_len + new_tokens) // BLOCK_SIZE) * BLOCK_SIZE
+
+    results = {}
+    for spec in (False, True):
+        eng = StreamedBatchEngine(cfg, params, ServeConfig(
+            max_seq=max_seq, prefill_chunk=16, max_new_tokens=new_tokens,
+            max_batch=max_batch, paged=True, block_size=BLOCK_SIZE,
+            spec_decode=spec, spec_k=spec_k))
+        eng.submit(prompts[0])
+        eng.run()  # warm every compile (chunk fns, decode/verify, scatter)
+        walls, out, uids = [], None, None
+        for _ in range(3):  # median of 3: single runs are ~60ms, too
+            # jittery on a loaded host for an asserted A/B
+            eng.decode_steps = 0
+            eng.spec_ticks = eng.spec_proposed = eng.spec_accepted = 0
+            t0 = time.perf_counter()
+            uids = [eng.submit(p) for p in prompts]
+            out = eng.run()
+            walls.append(time.perf_counter() - t0)
+        results[spec] = dict(
+            out=[out[u] for u in uids], dt=float(np.median(walls)),
+            steps=eng.decode_steps,
+            proposed=eng.spec_proposed, accepted=eng.spec_accepted)
+    off, on = results[False], results[True]
+    for a, b in zip(off["out"], on["out"]):  # greedy parity is the contract
+        np.testing.assert_array_equal(a, b)
+    assert on["steps"] < off["steps"], (
+        "speculation must finish in strictly fewer decode steps "
+        f"({on['steps']} vs {off['steps']})")
+    if strict:
+        assert on["dt"] < off["dt"], (
+            "speculation must win wall-clock on a lookup-friendly workload: "
+            f"{on['dt']:.3f}s vs {off['dt']:.3f}s")
+    total = n_requests * new_tokens
+    rate = on["accepted"] / max(1, on["proposed"])
+    return [
+        f"serving_spec_accept_rate,{rate:.2f},"
+        f"{on['accepted']}/{on['proposed']} drafts accepted (k={spec_k}, "
+        f"{n_requests}req x {prompt_len}p repetitive + {new_tokens}n)",
+        f"serving_spec_decode_steps,{on['steps']},"
+        f"verify steps vs {off['steps']} plain decode steps",
+        f"serving_spec_tokens_per_s,{total / on['dt']:.1f},"
+        f"vs {total / off['dt']:.1f} non-speculative "
+        f"({off['dt'] / on['dt']:.2f}x; proposed "
+        f"{on['proposed'] / on['dt']:.1f} tok/s, accepted "
+        f"{on['accepted'] / on['dt']:.1f} tok/s)",
+    ]
+
+
 def run() -> list[str]:
     cfg = C.get_smoke_config(ARCH)
     params = T.init_params(cfg, jax.random.PRNGKey(0))
@@ -256,7 +338,12 @@ def run() -> list[str]:
 
     seq_tps = total_tokens / t_seq
     cb_tps = total_tokens / t_cb
-    sharing_lines = run_sharing(cfg, params) + run_tuned(cfg, params)
+    # strict=False: the aggregated report must not be aborted by wall-clock
+    # jitter on a loaded host; the CSV line reports the ratio either way
+    # (the deterministic fewer-decode-steps assert still holds), and a
+    # direct run_spec() keeps the strict tokens/s acceptance bar.
+    sharing_lines = (run_sharing(cfg, params) + run_tuned(cfg, params)
+                     + run_spec(cfg, params, strict=False))
     return [
         f"serving_seq_tokens_per_s,{seq_tps:.1f},"
         f"{N_REQUESTS}req x {PROMPT_LEN}p+{NEW_TOKENS}n sequential",

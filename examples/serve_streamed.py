@@ -131,6 +131,27 @@ def main() -> None:
         assert outs_ref[True] == outs_ref[False]
         print("[serve] prefix sharing token-identical=True")
 
+        # speculative multi-token decode: an n-gram/prompt-lookup drafter
+        # proposes spec_k tokens per slot, one batched verify step scores
+        # all k+1 positions, and slots advance by the accepted prefix —
+        # the ITERATIVE (per-token) decode chain restructured into a
+        # streamable chunked pipeline.  Greedy tokens stay identical.
+        spe = StreamedBatchEngine(cfg, params, ServeConfig(
+            max_seq=pseq, prefill_chunk=args.chunk,
+            max_new_tokens=args.new_tokens, max_batch=2,
+            paged=True, block_size=block, spec_decode=True, spec_k=4))
+        vids = [spe.submit(np.asarray(tokens[i])) for i in range(b)]
+        vouts = spe.run()
+        vsame = all(
+            vouts[u].tolist() == toks[i].tolist()
+            for i, u in enumerate(vids))
+        vrate = spe.spec_accepted / max(1, spe.spec_proposed)
+        print(f"[serve] speculative decode (k=4): {spe.spec_ticks} verify "
+              f"steps for {b * args.new_tokens} tokens, "
+              f"{spe.spec_accepted}/{spe.spec_proposed} drafts accepted "
+              f"({vrate:.0%}); token-identical={vsame}")
+        assert vsame
+
         # measurement-driven autotuning: profile the live backend, search
         # around the analytic plan, and build an engine from the TunedPlan
         # — same tokens, measured (not guessed) knobs.

@@ -93,6 +93,30 @@ def paged_attention(
         softcap=softcap, scale=scale, interpret=interpret)
 
 
+@functools.partial(
+    jax.jit, static_argnames=("window", "softcap", "scale", "interpret"))
+def paged_attention_multi(
+    q,  # (B, T, H, hd): T-token draft block per slot
+    k_pool,  # (num_blocks, block_size, Hkv, hd)
+    v_pool,
+    page_table,  # (B, n_pages) int32
+    cur_len,  # (B,) int32: absolute position of token 0 per slot
+    *,
+    window=0,
+    softcap=0.0,
+    scale=None,
+    interpret=None,
+):
+    """q_len>1 paged decode (speculative verify): scores a pending token
+    plus T-1 draft tokens per slot in one pass, causal within the block —
+    query t sees pool positions ``<= cur_len + t``."""
+    interpret = _default_interpret() if interpret is None else interpret
+    scale = scale if scale is not None else 1.0 / math.sqrt(q.shape[-1])
+    return _pa.paged_attention_multi_kernel(
+        q, k_pool, v_pool, page_table, cur_len, window=window,
+        softcap=softcap, scale=scale, interpret=interpret)
+
+
 @functools.partial(jax.jit, static_argnames=("block", "row_tile", "interpret"))
 def fwt(x, *, block=None, row_tile=256, interpret=None):
     """Walsh-Hadamard transform of a flat (n,) or batched (r, n) input.

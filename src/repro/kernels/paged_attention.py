@@ -14,6 +14,13 @@ scratch across it, exactly like ``flash_attention``'s KV stream.  Pages
 fully beyond a row's ``cur_len`` (or outside its sliding window) skip
 compute via ``pl.when``; in-page masking is positional (iota vs ``cur_len``),
 so trash-page garbage never contributes.
+
+``q_len > 1`` (speculative multi-token decode) folds the query block into
+the row dimension: the kernel scores ``q_len * g`` query rows per (batch,
+kv-head) cell, with row ``r``'s query sitting at absolute position
+``cur_len + r // g`` — the causal-within-the-block mask of the verify step.
+A page is skipped only when *every* query in the block masks it (the
+youngest query bounds the causal cut, the oldest bounds the window cut).
 """
 
 from __future__ import annotations
@@ -33,16 +40,18 @@ NEG_INF = -1e30
 def _paged_kernel(
     pt_ref,  # SMEM (B, n_pages) int32: scalar-prefetched page table
     cl_ref,  # SMEM (B,) int32: per-row current position
-    q_ref,  # (1, 1, g, hd)
+    q_ref,  # (1, 1, q_len * g, hd)
     k_ref,  # (1, bs, 1, hd): one physical page of this kv head
     v_ref,  # (1, bs, 1, hd)
-    o_ref,  # (1, 1, g, hd)
-    m_ref,  # VMEM (g,)
-    l_ref,  # VMEM (g,)
-    acc_ref,  # VMEM (g, hd)
+    o_ref,  # (1, 1, q_len * g, hd)
+    m_ref,  # VMEM (q_len * g,)
+    l_ref,  # VMEM (q_len * g,)
+    acc_ref,  # VMEM (q_len * g, hd)
     *,
     n_pages: int,
     block_size: int,
+    q_len: int,
+    group: int,
     window: int,
     softcap: float,
     scale: float,
@@ -57,15 +66,16 @@ def _paged_kernel(
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
     cur = cl_ref[b]
-    # Page-level pruning: skip pages entirely past cur (unallocated tail —
-    # their table entries point at the trash page) or behind the window.
-    live = j * block_size <= cur
+    # Page-level pruning: skip pages entirely past the *youngest* query
+    # (cur + q_len - 1; the unallocated tail's table entries point at the
+    # trash page) or behind the *oldest* query's window.
+    live = j * block_size <= cur + (q_len - 1)
     if window > 0:
         live = live & (cur - (j * block_size + block_size - 1) < window)
 
     @pl.when(live)
     def _compute():
-        q = q_ref[0, 0]  # (g, hd)
+        q = q_ref[0, 0]  # (q_len * g, hd)
         k = k_ref[0, :, 0, :]  # (bs, hd)
         s = jax.lax.dot_general(
             q, k, (((1,), (1,)), ((), ())),
@@ -73,11 +83,15 @@ def _paged_kernel(
         if softcap > 0.0:
             s = softcap * jnp.tanh(s / softcap)
 
-        g, bs = s.shape
-        pos = j * block_size + jax.lax.broadcasted_iota(jnp.int32, (g, bs), 1)
-        ok = pos <= cur
+        rows, bs = s.shape
+        pos = j * block_size + jax.lax.broadcasted_iota(
+            jnp.int32, (rows, bs), 1)
+        # Row r is query r // group at absolute position cur + r // group:
+        # causal within the draft block, per query.
+        qpos = cur + jax.lax.broadcasted_iota(jnp.int32, (rows, bs), 0) // group
+        ok = pos <= qpos
         if window > 0:
-            ok = ok & (cur - pos < window)
+            ok = ok & (qpos - pos < window)
         s = jnp.where(ok, s, NEG_INF)
 
         m_old = m_ref[...]
@@ -98,6 +112,59 @@ def _paged_kernel(
         o_ref[0, 0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
 
 
+def _paged_call(
+    qr: jax.Array,  # (B, Hkv, q_len * g, hd)
+    k_pool: jax.Array,
+    v_pool: jax.Array,
+    page_table: jax.Array,
+    cur_len: jax.Array,
+    *,
+    q_len: int,
+    group: int,
+    window: int,
+    softcap: float,
+    scale: float,
+    interpret: bool,
+) -> jax.Array:
+    b, hkv, rows, hd = qr.shape
+    nb, bs, _, _ = k_pool.shape
+    n_pages = page_table.shape[1]
+    kern = functools.partial(
+        _paged_kernel, n_pages=n_pages, block_size=bs, q_len=q_len,
+        group=group, window=window, softcap=softcap, scale=scale)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, hkv, n_pages),
+        in_specs=[
+            pl.BlockSpec((1, 1, rows, hd),
+                         lambda bb, hh, jj, pt, cl: (bb, hh, 0, 0)),
+            pl.BlockSpec((1, bs, 1, hd),
+                         lambda bb, hh, jj, pt, cl: (pt[bb, jj], 0, hh, 0)),
+            pl.BlockSpec((1, bs, 1, hd),
+                         lambda bb, hh, jj, pt, cl: (pt[bb, jj], 0, hh, 0)),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, 1, rows, hd), lambda bb, hh, jj, pt, cl: (bb, hh, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((rows,), jnp.float32),
+            pltpu.VMEM((rows,), jnp.float32),
+            pltpu.VMEM((rows, hd), jnp.float32),
+        ],
+    )
+
+    return pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, hkv, rows, hd), qr.dtype),
+        compiler_params=_plc.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(page_table.astype(jnp.int32), cur_len.astype(jnp.int32), qr,
+      k_pool, v_pool)
+
+
 def paged_attention_kernel(
     q: jax.Array,  # (B, H, hd) single-token queries (H = Hkv * G)
     k_pool: jax.Array,  # (num_blocks, block_size, Hkv, hd)
@@ -114,41 +181,39 @@ def paged_attention_kernel(
     nb, bs, hkv, _ = k_pool.shape
     assert h % hkv == 0, (h, hkv)
     g = h // hkv
-    n_pages = page_table.shape[1]
     # Head layout matches _broadcast_kv: query head i attends kv head i // g.
     qr = q.reshape(b, hkv, g, hd)
-
-    kern = functools.partial(
-        _paged_kernel, n_pages=n_pages, block_size=bs, window=window,
-        softcap=softcap, scale=scale)
-
-    grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=2,
-        grid=(b, hkv, n_pages),
-        in_specs=[
-            pl.BlockSpec((1, 1, g, hd), lambda bb, hh, jj, pt, cl: (bb, hh, 0, 0)),
-            pl.BlockSpec((1, bs, 1, hd),
-                         lambda bb, hh, jj, pt, cl: (pt[bb, jj], 0, hh, 0)),
-            pl.BlockSpec((1, bs, 1, hd),
-                         lambda bb, hh, jj, pt, cl: (pt[bb, jj], 0, hh, 0)),
-        ],
-        out_specs=pl.BlockSpec(
-            (1, 1, g, hd), lambda bb, hh, jj, pt, cl: (bb, hh, 0, 0)),
-        scratch_shapes=[
-            pltpu.VMEM((g,), jnp.float32),
-            pltpu.VMEM((g,), jnp.float32),
-            pltpu.VMEM((g, hd), jnp.float32),
-        ],
-    )
-
-    out = pl.pallas_call(
-        kern,
-        grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((b, hkv, g, hd), q.dtype),
-        compiler_params=_plc.CompilerParams(
-            dimension_semantics=("parallel", "parallel", "arbitrary"),
-        ),
-        interpret=interpret,
-    )(page_table.astype(jnp.int32), cur_len.astype(jnp.int32), qr,
-      k_pool, v_pool)
+    out = _paged_call(
+        qr, k_pool, v_pool, page_table, cur_len, q_len=1, group=g,
+        window=window, softcap=softcap, scale=scale, interpret=interpret)
     return out.reshape(b, h, hd)
+
+
+def paged_attention_multi_kernel(
+    q: jax.Array,  # (B, T, H, hd): T-token draft block per slot
+    k_pool: jax.Array,  # (num_blocks, block_size, Hkv, hd)
+    v_pool: jax.Array,  # (num_blocks, block_size, Hkv, hd)
+    page_table: jax.Array,  # (B, n_pages) int32
+    cur_len: jax.Array,  # (B,) int32: position of token 0 per slot
+    *,
+    window: int = 0,
+    softcap: float = 0.0,
+    scale: float,
+    interpret: bool = False,
+) -> jax.Array:
+    """q_len>1 decode from the pool: query t of slot b sits at absolute
+    position ``cur_len[b] + t`` (speculative verify: one pending token plus
+    the draft tail), masked causally within the block."""
+    b, t, h, hd = q.shape
+    nb, bs, hkv, _ = k_pool.shape
+    assert h % hkv == 0, (h, hkv)
+    g = h // hkv
+    # (B, T, Hkv, g, hd) -> (B, Hkv, T, g, hd): row r = query r // g of
+    # group member r % g, matching the kernel's row -> position map.
+    qr = q.reshape(b, t, hkv, g, hd).transpose(0, 2, 1, 3, 4).reshape(
+        b, hkv, t * g, hd)
+    out = _paged_call(
+        qr, k_pool, v_pool, page_table, cur_len, q_len=t, group=g,
+        window=window, softcap=softcap, scale=scale, interpret=interpret)
+    return out.reshape(b, hkv, t, g, hd).transpose(0, 2, 1, 3, 4).reshape(
+        b, t, h, hd)

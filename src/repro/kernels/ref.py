@@ -82,6 +82,48 @@ def paged_attention_ref(
     return out.astype(q.dtype)
 
 
+def paged_attention_multi_ref(
+    q: jax.Array,  # (B, T, H, hd): T-token draft block per slot
+    k_pool: jax.Array,  # (num_blocks, block_size, Hkv, hd)
+    v_pool: jax.Array,  # (num_blocks, block_size, Hkv, hd)
+    page_table: jax.Array,  # (B, n_pages) int32
+    cur_len: jax.Array,  # (B,) int32: absolute position of token 0 per slot
+    *,
+    window: int = 0,
+    softcap: float = 0.0,
+    scale: float,
+) -> jax.Array:
+    """Oracle for the q_len>1 paged decode kernel: gather each row's pages,
+    then attention with the per-query causal cut — query t at absolute
+    position ``cur_len + t`` sees keys at positions ``<= cur_len + t``."""
+    b, t, h, hd = q.shape
+    nb, bs, hkv, _ = k_pool.shape
+    g = h // hkv
+    n_pages = page_table.shape[1]
+    s_log = n_pages * bs
+    k = k_pool[page_table].reshape(b, s_log, hkv, hd)
+    v = v_pool[page_table].reshape(b, s_log, hkv, hd)
+    kf = jnp.broadcast_to(
+        k[:, :, :, None], (b, s_log, hkv, g, hd)).reshape(b, s_log, h, hd)
+    vf = jnp.broadcast_to(
+        v[:, :, :, None], (b, s_log, hkv, g, hd)).reshape(b, s_log, h, hd)
+
+    s = jnp.einsum("bthd,bkhd->bhtk", q.astype(jnp.float32),
+                   kf.astype(jnp.float32)) * scale
+    if softcap > 0.0:
+        s = softcap * jnp.tanh(s / softcap)
+    pos = jnp.arange(s_log)[None, None, :]  # (1, 1, S)
+    qpos = (cur_len.astype(jnp.int32)[:, None, None]
+            + jnp.arange(t)[None, :, None])  # (B, T, 1)
+    ok = pos <= qpos
+    if window > 0:
+        ok = ok & (qpos - pos < window)
+    s = jnp.where(ok[:, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhtk,bkhd->bthd", p, vf.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
 def fwt_ref(x: jax.Array) -> jax.Array:
     """Unnormalized Walsh-Hadamard transform over the last axis."""
     n = x.shape[-1]

@@ -60,6 +60,17 @@ def main() -> None:
                          "same physical pages (copy-on-write; needs --paged)")
     ap.add_argument("--prefix-min-pages", type=int, default=1,
                     help="shortest prefix worth sharing, in pages")
+    ap.add_argument("--paged-kernel", choices=("auto", "on", "off"),
+                    default="auto",
+                    help="decode through the Pallas pool kernel; auto = "
+                         "backend default (on for TPU, off elsewhere)")
+    ap.add_argument("--spec-decode", action="store_true",
+                    help="speculative multi-token decode: an n-gram/prompt-"
+                         "lookup drafter proposes spec-k tokens, one "
+                         "batched verify step scores them all, and slots "
+                         "advance by the accepted prefix per tick")
+    ap.add_argument("--spec-k", type=int, default=4,
+                    help="draft tokens proposed per verify step")
     args = ap.parse_args()
     if args.prefix_sharing and not args.paged:
         ap.error("--prefix-sharing requires --paged")
@@ -79,8 +90,12 @@ def main() -> None:
         paged=args.paged,
         block_size=args.block_size,
         num_blocks=args.num_blocks,
+        paged_kernel={"auto": None, "on": True, "off": False}[
+            args.paged_kernel],
         prefix_sharing=args.prefix_sharing,
-        prefix_min_pages=args.prefix_min_pages)
+        prefix_min_pages=args.prefix_min_pages,
+        spec_decode=args.spec_decode,
+        spec_k=args.spec_k)
 
     b = args.requests
     tokens = jax.random.randint(
@@ -157,6 +172,15 @@ def main() -> None:
                          f"({eng.prefix_pages_shared * st.page_bytes}B of "
                          f"prefill copies avoided, "
                          f"{eng.kv.cow_forks} COW forks)")
+        if args.spec_decode:
+            rate = eng.spec_accepted / max(1, eng.spec_proposed)
+            decoded = total_new - eng.admissions  # first tokens are prefill's
+            mode += (f", spec-decode k={eng.scfg.spec_k}: "
+                     f"{eng.spec_accepted}/{eng.spec_proposed} drafts "
+                     f"accepted ({rate:.0%}), "
+                     f"{decoded / max(1, eng.decode_steps):.2f} "
+                     f"tokens/step over {eng.spec_ticks} verify + "
+                     f"{eng.decode_steps - eng.spec_ticks} plain ticks")
 
     print(f"[serve] {args.arch} ({mode}): {b} requests x {args.prompt_len} "
           f"prompt -> {total_new // b} new tokens each in {dt:.2f}s "

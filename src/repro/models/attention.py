@@ -309,7 +309,7 @@ _flash.defvjp(_flash_fwd, _flash_bwd)
 
 
 def decode_attention(
-    q: jax.Array,  # (B, 1, H, hd)
+    q: jax.Array,  # (B, T, H, hd): T = 1 (plain decode) or a draft block
     k_cache: jax.Array,  # (B, S, Hkv, hd)
     v_cache: jax.Array,  # (B, S, Hkv, hd)
     *,
@@ -318,12 +318,17 @@ def decode_attention(
     softcap_val: float = 0.0,
     scale: float | None = None,
 ) -> jax.Array:
-    """Single-token attention against a (possibly ring-buffered) KV cache.
+    """Decode attention against a (possibly ring-buffered) KV cache.
 
     ``cur_len`` may be per-batch (continuous batching: each slot sits at its
     own position), in which case the visibility mask is computed per row.
+    With ``T > 1`` (speculative multi-token decode) query ``t`` sits at
+    absolute position ``cur_len + t`` and its mask is causal within the
+    block: key ``p`` is visible iff ``p <= cur_len + t`` (and inside the
+    window) — the per-slot variable-length query block of the verify step.
     """
     b, s, hkv, hd = k_cache.shape
+    t = q.shape[1]
     g = q.shape[2] // hkv
     scale = scale if scale is not None else 1.0 / math.sqrt(hd)
     kf, vf = _broadcast_kv(k_cache, v_cache, g)  # (B,S,H,hd)
@@ -331,17 +336,18 @@ def decode_attention(
     sc = jnp.einsum("bqhd,bkhd->bhqk", q, kf.astype(q.dtype),
                     preferred_element_type=jnp.float32) * scale
     sc = layers.softcap(sc, softcap_val)
-    slot = jnp.arange(s)[None, :]  # (1, S)
-    cl = jnp.broadcast_to(jnp.asarray(cur_len, jnp.int32), (b,))[:, None]  # (B, 1)
+    slot = jnp.arange(s)[None, None, :]  # (1, 1, S)
+    cl = jnp.broadcast_to(jnp.asarray(cur_len, jnp.int32), (b,))
+    qpos = cl[:, None, None] + jnp.arange(t)[None, :, None]  # (B, T, 1)
     if window > 0 and s == window:
         # Ring buffer: slot s holds original position p ≡ s (mod window) with
-        # p <= cur_len; valid once written.
-        ok = (slot <= cl) | (cl >= window)
+        # p <= qpos; valid once written.
+        ok = (slot <= qpos) | (qpos >= window)
     else:
-        ok = slot <= cl
+        ok = slot <= qpos
         if window > 0:
-            ok = ok & (cl - slot < window)
-    sc = jnp.where(ok[:, None, None, :], sc, NEG_INF)
+            ok = ok & (qpos - slot < window)
+    sc = jnp.where(ok[:, None], sc, NEG_INF)
     p = jax.nn.softmax(sc, axis=-1)
     out = jnp.einsum("bhqk,bkhd->bqhd", p.astype(vf.dtype), vf,
                      preferred_element_type=jnp.float32)
@@ -349,7 +355,7 @@ def decode_attention(
 
 
 def paged_decode_attention(
-    q: jax.Array,  # (B, 1, H, hd)
+    q: jax.Array,  # (B, T, H, hd): T = 1, or a speculative draft block
     k_pool: jax.Array,  # (num_blocks, block_size, Hkv, hd) global page pool
     v_pool: jax.Array,  # (num_blocks, block_size, Hkv, hd)
     page_table: jax.Array,  # (B, n_pages) int32: logical page -> pool block
@@ -359,7 +365,7 @@ def paged_decode_attention(
     softcap_val: float = 0.0,
     scale: float | None = None,
 ) -> jax.Array:
-    """Single-token attention against the paged KV pool (gather reference).
+    """Decode attention against the paged KV pool (gather reference).
 
     Each row's logical sequence is the concatenation of its page-table
     entries (position p lives in page ``p // block_size`` at offset
@@ -459,21 +465,35 @@ def attention_apply(
     if (cur_len is not None and cache is not None and kv_source is None
             and page_table is not None):
         # Paged decode: the cache leaves are the global page pool
-        # (num_blocks, block_size, hkv, hd).  Row i's K/V lands in its slot's
-        # current page (page-table indirection); free slots map to the trash
-        # block, so their padding writes never touch live pages.
+        # (num_blocks, block_size, hkv, hd).  Row i's s-token block lands at
+        # its slot's positions cur_len..cur_len+s-1 through the page-table
+        # indirection; free slots map to the trash block, so their padding
+        # writes never touch live pages.  Positions past the table (a draft
+        # block's padding tail) are routed to the trash block too — the
+        # engine only ensures pages through each slot's live draft length.
         nb, bs_pg = cache["k"].shape[0], cache["k"].shape[1]
-        bidx = jnp.arange(b)
-        page = page_table[bidx, cur_len // bs_pg]  # (B,) physical block ids
-        off = cur_len % bs_pg
-        k_pool = cache["k"].at[page, off].set(k[:, 0].astype(cache["k"].dtype))
-        v_pool = cache["v"].at[page, off].set(v[:, 0].astype(cache["v"].dtype))
+        n_pages = page_table.shape[1]
+        pos = cur_len[:, None] + jnp.arange(s)[None, :]  # (B, S)
+        idx = pos // bs_pg
+        page = jnp.where(
+            idx < n_pages,
+            jnp.take_along_axis(page_table, jnp.minimum(idx, n_pages - 1),
+                                axis=1),
+            0)  # (B, S) physical block ids (0 = trash)
+        off = pos % bs_pg
+        k_pool = cache["k"].at[page, off].set(k.astype(cache["k"].dtype))
+        v_pool = cache["v"].at[page, off].set(v.astype(cache["v"].dtype))
         new_cache = {"k": k_pool, "v": v_pool}
         if paged_kernel:
             from repro.kernels import ops as _kops
-            out = _kops.paged_attention(
-                q[:, 0], k_pool, v_pool, page_table, cur_len,
-                window=window, softcap=softcap_val, scale=scale)[:, None]
+            if s == 1:
+                out = _kops.paged_attention(
+                    q[:, 0], k_pool, v_pool, page_table, cur_len,
+                    window=window, softcap=softcap_val, scale=scale)[:, None]
+            else:
+                out = _kops.paged_attention_multi(
+                    q, k_pool, v_pool, page_table, cur_len,
+                    window=window, softcap=softcap_val, scale=scale)
         else:
             out = paged_decode_attention(
                 q, k_pool, v_pool, page_table, cur_len=cur_len, window=window,
@@ -481,19 +501,23 @@ def attention_apply(
     elif cur_len is not None and cache is not None and kv_source is None:
         # Decode: write this step's K/V into the cache (ring-buffered if SWA).
         s_cache = cache["k"].shape[1]
-        if window > 0 and s_cache == window:
-            write_at = jnp.mod(cur_len, window)
-        else:
-            write_at = cur_len
+        ring = window > 0 and s_cache == window
         if jnp.ndim(cur_len) == 0:
+            write_at = jnp.mod(cur_len, window) if ring else cur_len
             k_cache = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype), (0, write_at, 0, 0))
             v_cache = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype), (0, write_at, 0, 0))
         else:
-            # Per-slot positions (continuous batching): scatter row i's K/V at
-            # its own write offset.
-            bidx = jnp.arange(b)
-            k_cache = cache["k"].at[bidx, write_at].set(k[:, 0].astype(cache["k"].dtype))
-            v_cache = cache["v"].at[bidx, write_at].set(v[:, 0].astype(cache["v"].dtype))
+            # Per-slot positions (continuous batching): scatter row i's
+            # s-token K/V block at its own write offsets.  Positions past
+            # max_seq (a draft block's padding tail) are dropped.
+            bidx = jnp.arange(b)[:, None]
+            wpos = cur_len[:, None] + jnp.arange(s)[None, :]  # (B, S)
+            if ring:
+                wpos = jnp.mod(wpos, window)
+            k_cache = cache["k"].at[bidx, wpos].set(
+                k.astype(cache["k"].dtype), mode="drop")
+            v_cache = cache["v"].at[bidx, wpos].set(
+                v.astype(cache["v"].dtype), mode="drop")
         new_cache = {"k": k_cache, "v": v_cache}
         out = decode_attention(
             q, k_cache, v_cache, cur_len=cur_len, window=window,

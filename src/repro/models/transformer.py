@@ -600,6 +600,76 @@ def decode_step_paged(
     return logits, caches
 
 
+def _multi_unit_check(cfg: ModelConfig, caches: Params | None = None) -> None:
+    if any(spec.mixer == "mamba" for spec in cfg.layer_unit):
+        raise NotImplementedError(
+            "multi-token decode rolls rejected KV writes back by masking; "
+            "mamba/hybrid archs advance irreversible per-slot SSM state")
+    if caches is None:
+        return
+    for i, spec in enumerate(cfg.layer_unit):
+        c = caches["blocks"].get(f"layer{i}", {})
+        window = cfg.spec_window(spec)
+        if window > 0 and "k" in c and c["k"].shape[2] == window:
+            raise NotImplementedError(
+                "multi-token decode needs full-length caches (init_cache "
+                "ring=False): scattering a draft block into a ring buffer "
+                "overwrites committed keys before acceptance is known — "
+                "a rejected draft could never be rolled back")
+
+
+def decode_step_multi(
+    cfg: ModelConfig, params: Params, tokens: jax.Array, caches: Params,
+    cur_len: jax.Array,
+) -> tuple[jax.Array, Params]:
+    """Multi-token decode step: tokens (B, T) at absolute positions
+    ``cur_len + [0, T)`` — the speculative verify step's target pass.
+
+    Row b's token t is scored *and written* at position ``cur_len[b] + t``
+    with a causal mask inside the block (query t sees keys at positions
+    ``<= cur_len[b] + t``), so one jitted call scores a pending token plus
+    T-1 draft tokens per slot.  Positions past ``max_seq`` (a padding tail
+    beyond the slot's live draft length) are dropped, and rows past a
+    slot's accepted prefix are invisible to later steps (masked by
+    ``cur_len``) until real decode overwrites them — rejection needs no
+    cache mutation on this path.  Returns logits for all T positions
+    (B, T, V) and the updated caches.
+    """
+    assert jnp.ndim(cur_len) == 1, "multi-token decode needs per-slot positions"
+    _multi_unit_check(cfg, caches)
+    t = tokens.shape[1]
+    h = meshutil.shard_batch(_embed_tokens(cfg, params, tokens))
+    positions = cur_len[:, None] + jnp.arange(t)[None, :]
+    h, caches, _ = forward_hidden(
+        cfg, params, h, positions=positions, caches=caches, cur_len=cur_len)
+    h = layers.rmsnorm(params["final_norm"], h)
+    logits = h.astype(jnp.float32) @ _unembed(cfg, params).astype(jnp.float32).T
+    logits = layers.softcap(logits, cfg.final_softcap)
+    return logits, caches
+
+
+def decode_step_multi_paged(
+    cfg: ModelConfig, params: Params, tokens: jax.Array, caches: Params,
+    page_table: jax.Array, cur_len: jax.Array, *, paged_kernel: bool = False,
+) -> tuple[jax.Array, Params]:
+    """Paged twin of :func:`decode_step_multi`: K/V of the T positions land
+    in each slot's pages through the table; positions past a slot's mapped
+    pages (padding beyond its live draft length) go to the trash block, so
+    a draft block can never corrupt another slot's — or a shared — page."""
+    assert jnp.ndim(cur_len) == 1, "paged decode needs per-slot positions"
+    _multi_unit_check(cfg)
+    t = tokens.shape[1]
+    h = meshutil.shard_batch(_embed_tokens(cfg, params, tokens))
+    positions = cur_len[:, None] + jnp.arange(t)[None, :]
+    h, caches, _ = forward_hidden(
+        cfg, params, h, positions=positions, caches=caches, cur_len=cur_len,
+        page_table=page_table, paged_kernel=paged_kernel)
+    h = layers.rmsnorm(params["final_norm"], h)
+    logits = h.astype(jnp.float32) @ _unembed(cfg, params).astype(jnp.float32).T
+    logits = layers.softcap(logits, cfg.final_softcap)
+    return logits, caches
+
+
 def sample_tokens(
     logits: jax.Array,  # (B, V) f32
     *,

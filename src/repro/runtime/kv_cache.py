@@ -494,6 +494,24 @@ class PagedKVCache:
             self.peak_pages_in_use, self.pages_in_use)
         return True
 
+    def truncate(self, slot: int, length: int) -> None:
+        """Shrink ``slot``'s page table to cover exactly ``length`` rows —
+        the speculative-decode rollback: pages allocated for draft positions
+        beyond the accepted prefix go back to the free list.  The engine
+        only ever truncates pages it faulted in this tick (``ensure_write``
+        forks shared targets before writing), so the dropped tail is
+        exclusively owned — freeing it reaches refcount zero immediately
+        and never disturbs shared/COW prefix pages."""
+        keep = self.pages_for(length)
+        tail = self._owned[slot][keep:]
+        if not tail:
+            return
+        assert all(self.allocator.refcount(p) == 1 for p in tail), (
+            "rollback would drop a shared page", slot, tail)
+        self.allocator.free(tail)
+        del self._owned[slot][keep:]
+        self.page_table[slot, keep:] = TRASH_PAGE
+
     def release(self, slot: int) -> None:
         """Drop ``slot``'s page references and point its table at trash;
         blocks still shared (other slots / the prefix registry) stay."""

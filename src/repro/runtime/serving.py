@@ -71,6 +71,35 @@ Paged KV cache (``ServeConfig.paged=True``, see ``repro.runtime.kv_cache``):
   * **Fused sampling** — the jitted decode step samples on device (argmax /
     per-slot-key categorical), so a tick transfers one int32 per slot
     instead of a (B, vocab) logits round-trip.
+
+Speculative multi-token decode (``ServeConfig.spec_decode``, see
+``repro.runtime.spec``):
+
+  * **The ITERATIVE category, streamed** — plain decode is the paper's
+    non-streamable ITERATIVE pattern (one kernel re-run per token on
+    resident KV, a per-token RAW chain).  A drafter proposes ``spec_k``
+    tokens per slot (model-free n-gram/prompt-lookup by default; any
+    ``Drafter`` plugs in), one jitted verify step scores all ``k + 1``
+    positions (``decode_step_multi[_paged]``: per-slot variable-length
+    query blocks, causal masks inside the block), and each slot's ``cur``
+    advances by its accepted prefix plus a bonus token — a *variable*
+    number of tokens per tick.  The per-token chain becomes a chunked
+    stream of verify tasks, the paper's "restructure the dependence, then
+    stream" move, with ``spec_k`` as the new granularity knob the tuner
+    searches.
+  * **Rollback without corruption** — draft positions fault their pages up
+    front (best-effort: a slot never preempts a neighbor to speculate);
+    ``ensure_write`` COW-forks any shared target before the multi-token
+    scatter, padding tails route to the trash block, and after acceptance
+    ``kv.truncate`` returns the pages of rejected positions to the free
+    list at refcount zero — shared/COW prefix pages are never corrupted
+    and the pool invariant (``owned == pages_for(cur)``) is restored every
+    tick.
+  * **Parity** — greedy outputs are token-identical to the non-speculative
+    path: an accepted draft equals the target argmax at its position by
+    construction, so the emitted chain is exactly the plain greedy chain;
+    temperature mode uses rejection sampling, which preserves the target
+    distribution exactly (``repro.runtime.spec.verify``).
 """
 
 from __future__ import annotations
@@ -103,15 +132,27 @@ class ServeConfig:
     paged: bool = False  # page the batched KV cache (kv_cache.PagedKVCache)
     block_size: int = 16  # cache rows per page
     num_blocks: int | None = None  # pool size; None = contiguous-parity + trash
-    paged_kernel: bool = False  # decode via the Pallas pool kernel (TPU path)
+    paged_kernel: bool | None = None  # decode via the Pallas pool kernel;
+    # None = backend default (on for TPU, off elsewhere — the kernel's
+    # scalar-prefetched page gather only pays off where Mosaic pipelines it)
     prefix_sharing: bool = False  # map common prompt prefixes COW (SYNC once)
     prefix_min_pages: int = 1  # shortest prefix worth sharing, in pages
+    # speculative multi-token decode (repro.runtime.spec): a drafter
+    # proposes spec_k tokens, one batched verify step scores all k+1
+    # positions, and cur advances by the accepted prefix + 1 per tick
+    spec_decode: bool = False  # speculate/verify instead of 1 token/tick
+    spec_k: int = 4  # draft tokens proposed per verify step
+    spec_ngram: int = 3  # longest n-gram the default prompt-lookup matches
     # compile-cache bounds; None = module defaults, a TunedPlan sizes them
     # to its geometry (distinct pos0 offsets / admission page counts)
     chunk_jit_cap: int | None = None  # per-(len, first, pos0) prefill fns
     page_jit_cap: int | None = None  # per-n_pages scatter/gather/load fns
 
     def __post_init__(self) -> None:
+        if self.paged_kernel is None:
+            # Resolved at construction so every consumer (engine, tuner,
+            # fingerprints) sees one concrete value per process.
+            self.paged_kernel = jax.default_backend() == "tpu"
         if self.max_seq < 1:
             raise ValueError(f"max_seq must be >= 1, got {self.max_seq}")
         if self.prefill_chunk < 1:
@@ -134,6 +175,11 @@ class ServeConfig:
         if self.prefix_min_pages < 1:
             raise ValueError(
                 f"prefix_min_pages must be >= 1, got {self.prefix_min_pages}")
+        if self.spec_k < 1:
+            raise ValueError(f"spec_k must be >= 1, got {self.spec_k}")
+        if self.spec_ngram < 1:
+            raise ValueError(
+                f"spec_ngram must be >= 1, got {self.spec_ngram}")
         for cap in ("chunk_jit_cap", "page_jit_cap"):
             if getattr(self, cap) is not None and getattr(self, cap) < 1:
                 raise ValueError(
@@ -157,6 +203,16 @@ class ServeConfig:
 # arbitrary page-aligned offsets, so the compile cache is a bounded LRU
 # instead of growing one entry per distinct offset over a server's lifetime.
 _CHUNK_JIT_CAP = 32
+
+
+def slot_key(uid, step):
+    """Per-request sampling key: folded from (uid, emitted-count) so a
+    slot's draws depend only on its own stream — never on batch
+    composition or on how tokens were grouped into ticks.  The one key
+    recipe every sampler shares (host-side, fused decode, speculative
+    verify); jit/vmap-traceable."""
+    return jax.random.fold_in(
+        jax.random.fold_in(jax.random.PRNGKey(0), uid), step)
 
 
 class ServingEngine:
@@ -339,6 +395,8 @@ class _Slot:
     emitted: list[int] = dataclasses.field(default_factory=list)
     max_new: int = 0
     seq: int = 0  # admission order (newest is preempted first)
+    prompt: np.ndarray | None = None  # prompt tokens: the drafter's lookup
+    # corpus, and the readmission prefix re-map's registry key
 
     @property
     def free(self) -> bool:
@@ -363,6 +421,9 @@ class EvictedRequest:
     n_pages: int = 0  # pages gathered (0 = contiguous eviction)
     seq: int = 0  # original admission order — restored on readmit so a
     # preempted request never becomes the "youngest" (preemption victim) again
+    prompt: np.ndarray | None = None  # prompt tokens, carried so readmission
+    # can re-map a registered shared prefix at refcount+1 instead of
+    # re-scattering exclusive pages (and so the drafter keeps its corpus)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -476,7 +537,7 @@ class StreamedBatchEngine:
     """
 
     def __init__(self, cfg: ModelConfig, params: Any, scfg: ServeConfig,
-                 *, plan: Any = None):
+                 *, plan: Any = None, drafter: Any = None):
         # A TunedPlan (repro.tuning.db) — or anything with its ``apply``
         # contract — rewrites the streaming knobs (chunk, interleave, page
         # geometry, slot count, kernel path, compile-cache caps) before the
@@ -495,6 +556,12 @@ class StreamedBatchEngine:
             raise NotImplementedError(
                 "prefix sharing maps attention KV pages; mamba/hybrid archs "
                 "carry per-slot SSM state with no page-granular snapshot")
+        if scfg.spec_decode and any(
+                spec.mixer == "mamba" for spec in cfg.layer_unit):
+            raise NotImplementedError(
+                "speculative decode rolls rejected positions back by "
+                "masking KV writes; mamba/hybrid archs advance irreversible "
+                "per-slot SSM state")
         self.cfg = cfg
         self.params = params
         self.scfg = scfg
@@ -528,6 +595,12 @@ class StreamedBatchEngine:
         # of prefill chunks, which is exactly what prefix sharing cuts.
         self.prefix_hits = 0  # admissions that mapped a shared prefix
         self.prefix_pages_shared = 0  # pages mapped instead of prefilled
+        self.readmit_prefix_hits = 0  # readmissions that re-mapped their
+        # registered prefix (pages shared again instead of re-scattered)
+        self.readmit_prefix_pages = 0  # pages re-mapped on readmission
+        self.spec_ticks = 0  # verify steps run (speculative decode)
+        self.spec_proposed = 0  # draft tokens scored by verify steps
+        self.spec_accepted = 0  # draft tokens accepted (rate = acc/prop)
         self.last_stage_times: rmetric.StageTimes | None = None  # newest
         # measure_stage_times probe — retained (not discarded after
         # planning) so callers (an online re-tuner, dashboards) can read
@@ -544,8 +617,7 @@ class StreamedBatchEngine:
         temp = float(scfg.temperature)
 
         def _keys(uids, steps):
-            return jax.vmap(lambda u, s: jax.random.fold_in(
-                jax.random.fold_in(jax.random.PRNGKey(0), u), s))(uids, steps)
+            return jax.vmap(slot_key)(uids, steps)
 
         if self.paged:
             kern = scfg.paged_kernel
@@ -575,6 +647,18 @@ class StreamedBatchEngine:
                 gg, ll.astype(gg.dtype), i, axis=1), g, l))
         self._gather_jit = jax.jit(lambda g, i: jax.tree.map(
             lambda gg: jax.lax.dynamic_slice_in_dim(gg, i, 1, axis=1), g))
+        # Speculative decode: the drafter proposes, one jitted verify step
+        # (repro.runtime.spec) scores pending + spec_k positions per slot
+        # and accepts on device; ticks advance by a variable token count.
+        self.drafter = None
+        self._spec_jit = None
+        if scfg.spec_decode:
+            from repro.runtime import spec as _spec
+            self.drafter = (drafter if drafter is not None
+                            else _spec.NGramDrafter(max_n=scfg.spec_ngram))
+            self._spec_jit = _spec.make_verifier(
+                cfg, paged=self.paged, temperature=temp,
+                paged_kernel=scfg.paged_kernel)
 
     # -- queue ----------------------------------------------------------------
 
@@ -621,8 +705,7 @@ class StreamedBatchEngine:
     def _slot_key(uid: int, step: int) -> jax.Array:
         """Sampling key derived from (uid, step) so a request's draws don't
         depend on batch composition."""
-        return jax.random.fold_in(
-            jax.random.fold_in(jax.random.PRNGKey(0), uid), step)
+        return slot_key(uid, step)
 
     def _sample(self, logits_row: jax.Array, uid: int, step: int) -> int:
         """Per-request sampling: greedy, or temperature via the slot key."""
@@ -709,6 +792,7 @@ class StreamedBatchEngine:
         slot.pending = first
         slot.emitted = [first]
         slot.max_new = req.max_new_tokens
+        slot.prompt = req.tokens
         slot.seq = self._admit_seq
         self._admit_seq += 1
         self.peak_active = max(self.peak_active, len(self.active_slots))
@@ -722,6 +806,7 @@ class StreamedBatchEngine:
             self.outputs[slot.uid] = np.asarray(slot.emitted, np.int32)
             slot.uid = None
             slot.emitted = []
+            slot.prompt = None
             if self.paged:
                 self.kv.release(slot.index)
 
@@ -771,26 +856,37 @@ class StreamedBatchEngine:
         return False
 
     def _decode_tick(self) -> None:
+        """One decode tick: speculative (draft + batched verify) when
+        ``spec_decode`` is on, else one plain batched single-token step."""
+        if self.scfg.spec_decode:
+            return self._spec_tick()
+        return self._plain_tick()
+
+    def _fault_base_positions(self) -> None:
+        """Lazy page fault: make each active slot's write position
+        resident, preempting the youngest slots if the pool runs dry
+        (oldest-first service keeps the progress guarantee).  When no
+        other slot is left to victimize — e.g. the rest of the pool is
+        reserved by an admission's in-flight prefill — the faulting
+        slot preempts itself and waits for pages.  (Shared by the plain
+        and the speculative tick: one fault/preempt policy.)"""
+        for s in sorted(self.active_slots, key=lambda s: s.seq):
+            if s.uid is None:
+                continue  # preempted by an earlier iteration
+            while not self.kv.ensure_write(s.index, s.cur):
+                if not self._preempt_for_pages(frozenset({s.index})):
+                    self._preempted.append(self.evict(s.uid))
+                    self.preemptions += 1
+                    break
+
+    def _plain_tick(self) -> None:
         """One batched decode step for all slots (inactive rows are padding).
 
         Sampling is fused into the jitted step: the only device-to-host
         transfer per tick is the (B,) int32 of sampled tokens.
         """
         if self.paged:
-            # Lazy page fault: make each active slot's write position
-            # resident, preempting the youngest slots if the pool runs dry
-            # (oldest-first service keeps the progress guarantee).  When no
-            # other slot is left to victimize — e.g. the rest of the pool is
-            # reserved by an admission's in-flight prefill — the faulting
-            # slot preempts itself and waits for pages.
-            for s in sorted(self.active_slots, key=lambda s: s.seq):
-                if s.uid is None:
-                    continue  # preempted by an earlier iteration
-                while not self.kv.ensure_write(s.index, s.cur):
-                    if not self._preempt_for_pages(frozenset({s.index})):
-                        self._preempted.append(self.evict(s.uid))
-                        self.preemptions += 1
-                        break
+            self._fault_base_positions()
         act = self.active_slots
         if not act:
             return
@@ -826,6 +922,106 @@ class StreamedBatchEngine:
             s.emitted.append(int(picks[s.index]))
             self._reap(s)
 
+    # -- speculative decode ----------------------------------------------------
+
+    def _spec_budget(self, s: _Slot) -> int:
+        """Draft tokens worth proposing for ``s`` this tick: capped by the
+        remaining token budget (a tick emits at most budget + 1 tokens) and
+        by the cache rows left for the draft block's writes."""
+        return max(0, min(self.scfg.spec_k,
+                          s.max_new - len(s.emitted) - 1,
+                          self.scfg.max_seq - 1 - s.cur))
+
+    def _spec_tick(self) -> None:
+        """One speculate/verify step: the drafter proposes up to ``spec_k``
+        tokens per slot, one jitted multi-token target step scores all
+        ``k + 1`` positions, and each slot advances by its accepted prefix
+        plus the bonus token — a *variable* number of tokens per tick (the
+        chunked decode stream that makes the ITERATIVE category streamable).
+
+        Paged residency: the base position faults exactly like the plain
+        tick (preempting under pressure), but draft positions are
+        best-effort — a slot never preempts a neighbor just to speculate;
+        its draft shrinks to the pages available.  After acceptance the
+        pages covering rejected positions are rolled back to the free list
+        (``kv.truncate``); ``ensure_write`` COW-forks any shared target
+        first, so shared prefix pages are never corrupted and never freed.
+        """
+        k = self.scfg.spec_k
+        if self.paged:
+            self._fault_base_positions()
+        act = self.active_slots
+        if not act:
+            return
+        b = self.scfg.max_batch
+        toks = np.zeros((b, k + 1), np.int32)
+        cur = np.zeros((b,), np.int32)
+        d_len = np.zeros((b,), np.int32)
+        for s in act:
+            toks[s.index, 0] = s.pending
+            cur[s.index] = s.cur
+            budget = self._spec_budget(s)
+            draft = np.zeros(0, np.int32)
+            if budget > 0:
+                draft = np.asarray(self.drafter.propose(
+                    np.concatenate([np.asarray(s.prompt, np.int32),
+                                    np.asarray(s.emitted, np.int32)]),
+                    budget), np.int32)[:budget]
+            if self.paged and draft.size:
+                # Extend residency over the draft block without preempting
+                # anyone; on shortfall the draft shrinks to what fits.
+                have = draft.size
+                for pos in range(s.cur + 1, s.cur + draft.size + 1):
+                    if not self.kv.ensure_write(s.index, pos):
+                        have = pos - s.cur - 1
+                        break
+                draft = draft[:have]
+            if draft.size:
+                toks[s.index, 1: 1 + draft.size] = draft
+                d_len[s.index] = draft.size
+                self.spec_proposed += int(draft.size)
+        if not int(d_len.sum()):
+            # Every drafter came back empty (lookup miss, or the slots are
+            # at their final token): the k+1-wide verify step would pay
+            # ~(k+1)x a plain tick's compute with zero possible acceptance
+            # — dispatch the already-compiled single-token step instead.
+            return self._plain_tick()
+        args = [self.params, jnp.asarray(toks)]
+        if self.paged:
+            args += [self.kv.pools, self.kv.device_page_table()]
+        else:
+            args += [self.caches]
+        args += [jnp.asarray(cur), jnp.asarray(d_len)]
+        if self.scfg.temperature > 0.0:
+            uids = np.zeros((b,), np.int32)
+            steps = np.zeros((b,), np.int32)
+            for s in act:
+                uids[s.index] = s.uid
+                steps[s.index] = len(s.emitted)
+            args += [jnp.asarray(uids), jnp.asarray(steps)]
+        emit, n_accept, new_caches = self._spec_jit(*args)
+        if self.paged:
+            self.kv.pools = new_caches
+        else:
+            self.caches = new_caches
+        self.decode_steps += 1
+        self.spec_ticks += 1
+        emit = np.asarray(emit)  # (B, k+1) + (B,): the tick's only D2H
+        n_accept = np.asarray(n_accept)
+        for s in act:
+            n = int(n_accept[s.index])
+            self.spec_accepted += n
+            new = emit[s.index, : n + 1].tolist()
+            s.cur += n + 1
+            s.pending = new[-1]
+            s.emitted.extend(new)
+            if self.paged:
+                # Rollback: pages faulted for rejected draft positions go
+                # home; what stays is exactly pages_for(cur) — the same
+                # invariant the plain tick maintains.
+                self.kv.truncate(s.index, s.cur)
+            self._reap(s)
+
     # -- scheduling loop -------------------------------------------------------
 
     def step(self) -> None:
@@ -843,12 +1039,23 @@ class StreamedBatchEngine:
             # Gate on cur + 1, not cur: the very next decode tick writes at
             # position cur, so a page-aligned cur needs one more page than
             # the snapshot covers — gating on cur alone readmits a slot that
-            # faults immediately and bounces straight back here.  Retained
-            # prefix pages are reclaimable, so count them before giving up.
+            # faults immediately and bounces straight back here.  A
+            # registered prefix of the prompt is credited (re-mapped, not
+            # allocated), and retained prefix pages are reclaimable, so
+            # count both before giving up.  The match -> reclaim ->
+            # match-dropped loop converges like the admission gate's.
             while self._preempted and any(s.free for s in self.slots):
-                need = self.kv.pages_for(self._preempted[0].cur + 1)
-                if (need > self.kv.free_pages
-                        and not self.kv.reclaim_for(need)):
+                ev0 = self._preempted[0]
+                full = self.kv.pages_for(ev0.cur + 1)
+                fits = False
+                for _ in range(3):
+                    shared, _ = self._readmit_prefix(ev0)
+                    if full - shared <= self.kv.free_pages:
+                        fits = True
+                        break
+                    if not self.kv.reclaim_for(full - shared):
+                        break
+                if not fits:
                     break
                 self.readmit(self._preempted.popleft())
                 progressed = True
@@ -895,29 +1102,60 @@ class StreamedBatchEngine:
             uid=uid, caches=caches,
             cur=slot.cur, pending=slot.pending,
             emitted=list(slot.emitted), max_new=slot.max_new,
-            n_pages=n_pages, seq=slot.seq)
+            n_pages=n_pages, seq=slot.seq, prompt=slot.prompt)
         slot.uid = None
         slot.emitted = []
+        slot.prompt = None
         self._evicted_out += 1
         return ev
 
+    def _readmit_prefix(self, ev: EvictedRequest) -> tuple[int, list[int]]:
+        """Registered-prefix match for a readmission -> (n_pages, blocks).
+
+        A preempted sharer used to be re-scattered into exclusive pages —
+        duplicating the prefix exactly when the pool is tightest.  With the
+        prompt carried on ``EvictedRequest`` the registry lookup can run
+        again: matched blocks are byte-verified against the prompt tokens
+        and immutable until COW or reclaim, so mapping them at refcount+1
+        reproduces the evicted snapshot's prefix rows bitwise."""
+        if not (self.paged and self.scfg.prefix_sharing
+                and ev.prompt is not None and len(ev.prompt) > 1):
+            return 0, []
+        chunk = min(self.scfg.prefill_chunk, len(ev.prompt))
+        return self.kv.lookup_prefix(
+            ev.prompt, min_pages=self.scfg.prefix_min_pages,
+            align_tokens=chunk, count=False)
+
     def readmit(self, ev: EvictedRequest) -> int:
         """Write an evicted request back into any free slot; positions are
-        preserved so decode resumes exactly where it stopped."""
+        preserved so decode resumes exactly where it stopped.
+
+        With prefix sharing, a registered prefix of the request's prompt is
+        re-mapped at refcount+1 (its rows are dropped from the scatter), so
+        readmission under pool pressure costs only the unshared tail's
+        pages — the ROADMAP's readmission re-map."""
         slot = next((s for s in self.slots if s.free), None)
         if slot is None:
             raise RuntimeError("no free slot to readmit into")
         if self.paged:
+            shared_pages, blocks = self._readmit_prefix(ev)
+            if shared_pages:
+                self.kv.map_shared(slot.index, blocks)
             # cur + 1: the next tick writes at position cur, so when cur is
             # page-aligned one more page than the snapshot is needed now —
             # allocating it here instead of faulting next tick keeps a
             # freshly readmitted slot from bouncing straight back out.
             if not self.kv.alloc(slot.index, ev.cur + 1):
+                self.kv.release(slot.index)  # drop a mapped prefix cleanly
                 raise RuntimeError(
                     f"not enough free pages to readmit uid {ev.uid} "
                     f"(need {self.kv.pages_for(ev.cur + 1)}, "
                     f"free {self.kv.free_pages})")
-            self.kv.scatter(slot.index, ev.caches, ev.cur)
+            self.kv.scatter(slot.index, ev.caches, ev.cur,
+                            start_page=shared_pages)
+            if shared_pages:
+                self.readmit_prefix_hits += 1
+                self.readmit_prefix_pages += shared_pages
         else:
             self.caches = self._scatter_jit(
                 self.caches, ev.caches, jnp.int32(slot.index))
@@ -926,6 +1164,7 @@ class StreamedBatchEngine:
         slot.pending = ev.pending
         slot.emitted = list(ev.emitted)
         slot.max_new = ev.max_new
+        slot.prompt = ev.prompt
         # Restore the original admission order: a fresh seq here would make
         # every readmitted request the "youngest" and thus the next victim
         # of _preempt_for_pages — preempt/readmit thrash under pressure.

@@ -1,0 +1,37 @@
+"""Speculative multi-token decode for the streamed batch engine.
+
+The paper's two *non-streamable* categories are SYNC and ITERATIVE (§4.1);
+plain autoregressive decode is the serving instance of ITERATIVE — one
+kernel re-run per token on device-resident KV, a per-token RAW chain with
+nothing to overlap.  Speculation is the paper's "restructure the
+dependence, then stream" move applied to that chain: a cheap drafter
+proposes ``k`` tokens, one batched target step *verifies* all ``k + 1``
+positions at once, and the chain advances by a variable number of accepted
+tokens per tick.  Decode becomes a chunked stream of verify tasks — the
+same shape as chunked prefill's TRUE_DEPENDENT KV handoff — and gains a
+new granularity knob (``spec_k``) for the measurement-driven tuner.
+
+  * ``drafter``  — the ``Drafter`` protocol and the model-free
+    ``NGramDrafter`` (prompt-lookup over each slot's prompt + generated
+    tokens); a small draft transformer can plug in behind the same
+    protocol later.
+  * ``verify``   — the acceptance rules (greedy longest-matching-prefix,
+    temperature rejection sampling) and ``make_verifier``, the one jitted
+    multi-token target step: score ``k + 1`` positions per slot through
+    ``transformer.decode_step_multi[_paged]``, accept on device, return
+    the emitted tokens and per-slot acceptance counts (the tick's only
+    D2H is ``(B, k+1) + (B,)`` int32s).
+"""
+
+from repro.runtime.spec.drafter import Drafter, NGramDrafter
+from repro.runtime.spec.verify import (greedy_accept, make_verifier,
+                                       verify_greedy, verify_sampled)
+
+__all__ = [
+    "Drafter",
+    "NGramDrafter",
+    "greedy_accept",
+    "make_verifier",
+    "verify_greedy",
+    "verify_sampled",
+]

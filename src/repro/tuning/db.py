@@ -34,7 +34,9 @@ from repro.tuning.workload import WorkloadDescriptor
 
 #: Bump when TunedPlan's knob layout or the fingerprint recipe changes; a
 #: mismatch makes readers re-tune instead of misapplying old records.
-SCHEMA_VERSION = 1
+#: v2: speculative decode joined the knob layout (spec_decode mode flag +
+#: tuned spec_k) — v1 records predate the verify step entirely.
+SCHEMA_VERSION = 2
 
 _DEFAULT_MAX_ENTRIES = 256
 
@@ -77,6 +79,7 @@ def serving_mode(scfg: Any) -> dict:
         "paged": bool(scfg.paged),
         "prefix_sharing": bool(scfg.prefix_sharing),
         "greedy": scfg.temperature == 0.0,
+        "spec_decode": bool(getattr(scfg, "spec_decode", False)),
     }
 
 
@@ -130,13 +133,15 @@ class TunedPlan:
     decision: str  # the R-gate verdict the warm start was built from
     category: str  # dependency category of the workload (core.dependency)
     max_seq: int  # geometry the knobs were validated against
+    spec_decode: bool = False  # mode flag: the knobs assume speculation
+    spec_k: int = 4  # tuned draft length (decode-chunk granularity knob)
     trials: int = 0  # measured candidates the search paid for
     source: str = "measured"  # "measured" | "analytic" (search short-cut)
     schema: int = SCHEMA_VERSION
 
     def __post_init__(self) -> None:
         for field in ("prefill_chunk", "decode_interleave", "block_size",
-                      "max_batch", "prefix_min_pages", "max_seq"):
+                      "max_batch", "prefix_min_pages", "max_seq", "spec_k"):
             if getattr(self, field) < 1:
                 raise ValueError(
                     f"invalid plan: {field} must be >= 1, got "
@@ -194,6 +199,8 @@ class TunedPlan:
             num_blocks=num_blocks,
             paged_kernel=self.paged_kernel,
             prefix_min_pages=self.prefix_min_pages,
+            spec_decode=self.spec_decode,
+            spec_k=self.spec_k,
             chunk_jit_cap=chunk_cap,
             page_jit_cap=page_cap)
 

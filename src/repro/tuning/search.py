@@ -40,9 +40,13 @@ from repro.tuning.db import TunedPlan, fingerprint
 from repro.tuning.workload import WorkloadDescriptor, classify_workload
 
 #: Knob sweep order: granularity knobs first (they dominate per Zhang et
-#: al.), resource knobs after, binary kernel/registry knobs last.
-_DIMS = ("prefill_chunk", "block_size", "num_blocks", "max_batch",
+#: al.; ``spec_k`` is the decode stream's granularity the way
+#: ``prefill_chunk`` is the prefill stream's), resource knobs after,
+#: binary kernel/registry knobs last.
+_DIMS = ("prefill_chunk", "spec_k", "block_size", "num_blocks", "max_batch",
          "decode_interleave", "paged_kernel", "prefix_min_pages")
+
+_MAX_SPEC_K = 16
 
 _MIN_CHUNK = 16
 
@@ -87,6 +91,15 @@ def _candidates(
         if not streamable:
             return [cur]
         return sorted({max(1, cur - 1), cur, cur + 1})
+    if dim == "spec_k":
+        if not scfg.spec_decode:
+            return [cur]  # speculation off: the verify step never runs
+        # Draft length is the decode-chunk granularity knob: longer drafts
+        # amortize more dispatches but waste more verify compute per
+        # rejection.  Cap at the per-tick token budget — drafting past
+        # max_new_tokens can never be accepted.
+        hi = min(_MAX_SPEC_K, max(1, desc.max_new_tokens - 1))
+        return _pow2_neighbors(cur, 1, hi)
     if dim == "block_size":
         if not scfg.paged:
             return [cur]
@@ -122,7 +135,8 @@ def _serve_config(scfg, asg: dict):
         num_blocks=asg["num_blocks"],
         max_batch=asg["max_batch"],
         paged_kernel=asg["paged_kernel"],
-        prefix_min_pages=asg["prefix_min_pages"])
+        prefix_min_pages=asg["prefix_min_pages"],
+        spec_k=asg["spec_k"])
 
 
 def search_tuned_plan(
@@ -152,7 +166,8 @@ def search_tuned_plan(
         stage_times, prompt_len=desc.prompt_len_mean, max_seq=scfg.max_seq)
     category = classify_workload(
         desc, prefill_chunk=analytic.prefill_chunk,
-        prefix_staged=scfg.prefix_sharing)
+        prefix_staged=scfg.prefix_sharing,
+        spec_decode=scfg.spec_decode, spec_k=scfg.spec_k)
     streamable = category.streamable
     say(f"[tune] calibrated chunk={profile.chunk_s * 1e3:.2f}ms "
         f"decode={profile.decode_s * 1e3:.2f}ms -> {analytic.decision}, "
@@ -168,6 +183,7 @@ def search_tuned_plan(
             "max_batch": scfg.max_batch,
             "paged_kernel": scfg.paged_kernel,
             "prefix_min_pages": scfg.prefix_min_pages,
+            "spec_k": scfg.spec_k,
         }
 
     untuned = assignment(
@@ -282,6 +298,8 @@ def search_tuned_plan(
         paged=scfg.paged,
         paged_kernel=best_asg["paged_kernel"],
         prefix_min_pages=best_asg["prefix_min_pages"],
+        spec_decode=scfg.spec_decode,
+        spec_k=best_asg["spec_k"],
         tokens_per_s=best_m.tokens_per_s,
         admit_ms=best_m.admit_ms,
         baseline_tokens_per_s=baseline.tokens_per_s,

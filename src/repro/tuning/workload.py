@@ -13,7 +13,13 @@ serving engine actually executes:
     chunked-prefill RAW chain through the KV cache — NW-style wavefront);
   * decode-dominated                           -> ITERATIVE (the decode
     kernel re-runs many times on device-resident KV per prefill task;
-    overlapping only the prefill is negligible amortized);
+    overlapping only the prefill is negligible amortized) — *unless*
+    speculative decode is enabled: speculation restructures the per-token
+    RAW chain into verify chunks of ``spec_k + 1`` tokens, each reading
+    the KV the previous chunk wrote, so the decode stream becomes the
+    same TRUE_DEPENDENT chunked pipeline as chunked prefill (the paper's
+    "restructure the dependence, then stream" move applied to its own
+    non-streamable category);
   * concurrent requests, no shared data        -> INDEPENDENT;
   * a shared prompt prefix read by every task  -> SYNC by the paper's
     letter, but the engine applies the paper's own FALSE_DEPENDENT move
@@ -166,7 +172,7 @@ def synth_prompts(
 
 def to_task_graph(
     desc: WorkloadDescriptor, *, prefill_chunk: int,
-    prefix_staged: bool = False,
+    prefix_staged: bool = False, spec_decode: bool = False, spec_k: int = 0,
 ) -> dep.Workload:
     """The dependency graph the serving engine executes for ``desc``.
 
@@ -177,10 +183,30 @@ def to_task_graph(
     ``kernel_iterations`` is the decode-steps-per-prefill-task ratio: when
     decode re-runs many times on resident KV per prefill task, the workload
     is the paper's Iterative pattern.
+
+    With ``spec_decode`` a decode-dominated workload stops being modeled as
+    kernel re-runs on resident data: the engine executes verify *chunks* of
+    ``spec_k + 1`` positions, each reading the KV the previous chunk wrote
+    — a RAW chain of multi-token tasks, graphed exactly like the chunked
+    prefill chain (and therefore TRUE_DEPENDENT / streamable).
     """
     if prefill_chunk < 1:
         raise ValueError(f"prefill_chunk must be >= 1, got {prefill_chunk}")
     n_chunks = -(-desc.prompt_len_mean // prefill_chunk)
+    iters = max(1, round(desc.max_new_tokens / n_chunks))
+    if (spec_decode and spec_k >= 1
+            and iters >= dep.Workload.ITERATIVE_THRESHOLD):
+        # Speculation turned the per-token chain into a chunked decode
+        # stream: verify step t reads the pages step t-1 wrote (the same
+        # RAW handoff as chunked prefill, at spec_k + 1 granularity).
+        n_steps = -(-desc.max_new_tokens // (spec_k + 1))
+        tasks = [dep.Task.make("verify0", reads=["kv[prompt]"],
+                               writes=["kv[v0]"])]
+        for t in range(1, min(n_steps, _MAX_MODEL_TASKS)):
+            tasks.append(dep.Task.make(
+                f"verify{t}", reads=[f"kv[v{t - 1}]"],
+                writes=[f"kv[v{t}]"]))
+        return dep.Workload("serve-spec-decode", tasks)
     if desc.n_requests == 1:
         if n_chunks <= 1:
             tasks = [dep.Task.make("req0", reads=["prompt[0]"],
@@ -203,14 +229,12 @@ def to_task_graph(
             reads.add("prefix")
         tasks.append(dep.Task.make(f"req{i}", reads=reads,
                                    writes=[f"out[{i}]"]))
-    return dep.Workload(
-        "serve-batch", tasks,
-        kernel_iterations=max(1, round(desc.max_new_tokens / n_chunks)))
+    return dep.Workload("serve-batch", tasks, kernel_iterations=iters)
 
 
 def classify_workload(
     desc: WorkloadDescriptor, *, prefill_chunk: int,
-    prefix_staged: bool = False,
+    prefix_staged: bool = False, spec_decode: bool = False, spec_k: int = 0,
 ) -> dep.Category:
     """Map ``desc`` onto the paper's five categories (§4.1).
 
@@ -219,9 +243,17 @@ def classify_workload(
     (each admission prefills its own prefix copy) or stages it once
     (``prefix_sharing``), so only a dominant prefix — the halo~=payload
     lavaMD regime — stays non-streamable.
+
+    ``spec_decode``/``spec_k`` describe the engine's speculative multi-token
+    decode: a decode-dominated workload that used to land in ITERATIVE (and
+    short-circuit the tuner to the single-stream path) is re-graphed as the
+    verify-chunk RAW chain and classifies TRUE_DEPENDENT — streamable, so
+    the chunk/interleave/spec_k search actually runs for the most common
+    serving regime (long generations, short prompts).
     """
     cat = dep.classify(to_task_graph(
-        desc, prefill_chunk=prefill_chunk, prefix_staged=prefix_staged))
+        desc, prefill_chunk=prefill_chunk, prefix_staged=prefix_staged,
+        spec_decode=spec_decode, spec_k=spec_k))
     if (cat is dep.Category.SYNC and desc.n_requests > 1
             and 0.0 < desc.shared_prefix_fraction < SHARE_DOMINANT):
         return dep.Category.FALSE_DEPENDENT

@@ -117,6 +117,25 @@ class TestClassifier:
             d, prefill_chunk=16,
             prefix_staged=True) is dep.Category.INDEPENDENT
 
+    def test_spec_decode_restreams_iterative(self):
+        """Speculation restructures the per-token decode chain into verify
+        chunks — a RAW chain like chunked prefill — so the decode-dominated
+        workload leaves ITERATIVE and the tuner's search actually runs."""
+        d = _desc(max_new_tokens=512)
+        assert twl.classify_workload(
+            d, prefill_chunk=16) is dep.Category.ITERATIVE
+        cat = twl.classify_workload(
+            d, prefill_chunk=16, spec_decode=True, spec_k=4)
+        assert cat is dep.Category.TRUE_DEPENDENT and cat.streamable
+
+    def test_spec_decode_leaves_other_categories_alone(self):
+        """Speculation only re-graphs the decode-dominated shape; balanced
+        workloads classify as before."""
+        d = _desc()  # prefill-balanced: independent either way
+        assert twl.classify_workload(
+            d, prefill_chunk=16,
+            spec_decode=True, spec_k=4) is dep.Category.INDEPENDENT
+
 
 def _plan(fp="abc123", **kw):
     base = dict(
@@ -148,6 +167,10 @@ class TestTuningDB:
         paged = ServeConfig(max_seq=128, paged=True)
         flat = ServeConfig(max_seq=128)
         assert (tdb.fingerprint(cfg, d, paged, **kw)
+                != tdb.fingerprint(cfg, d, flat, **kw))
+        # ... nor do speculative and plain-decode plans
+        spec = ServeConfig(max_seq=128, spec_decode=True)
+        assert (tdb.fingerprint(cfg, d, spec, **kw)
                 != tdb.fingerprint(cfg, d, flat, **kw))
 
     def test_round_trip(self, tmp_path):
@@ -194,6 +217,18 @@ class TestTuningDB:
             _plan(prefill_chunk=0)
         with pytest.raises(ValueError):
             _plan(block_size=24)  # does not tile max_seq=128
+        with pytest.raises(ValueError):
+            _plan(spec_k=0)
+
+    def test_spec_knobs_round_trip(self, tmp_path):
+        plan = _plan(spec_decode=True, spec_k=2)
+        db = tdb.TuningDB(tmp_path / "t.json")
+        db.put(plan)
+        got = tdb.TuningDB(tmp_path / "t.json").get("abc123")
+        assert got.spec_decode and got.spec_k == 2
+        base = ServeConfig(max_seq=128, paged=True, spec_decode=True)
+        sc = got.apply(base)
+        assert sc.spec_decode and sc.spec_k == 2
 
     def test_apply_round_trips_into_serve_config(self):
         plan = _plan()
@@ -268,6 +303,27 @@ class TestSearch:
         assert (tuned_eng.single._chunk_jit_cap
                 == tuned_eng.scfg.chunk_jit_cap)
         assert tuned_eng.kv._jit_cap == tuned_eng.scfg.page_jit_cap
+
+    def test_spec_search_explores_spec_k_and_streams(self, served):
+        """The acceptance contract for the new knob: with spec_decode on, a
+        decode-dominated workload classifies streamable (no single-stream
+        short-circuit) and the search explores spec_k — the returned plan
+        carries the mode and a valid tuned draft length."""
+        cfg, params = served
+        scfg = ServeConfig(max_seq=96, prefill_chunk=16, max_new_tokens=24,
+                           max_batch=2, paged=True, block_size=16,
+                           spec_decode=True, spec_k=4)
+        desc = _desc(prompt_len_mean=24, prompt_len_max=24,
+                     max_new_tokens=24, n_requests=2)
+        plan = tuning.search_tuned_plan(
+            cfg, params, scfg, desc,
+            budget=tuning.SearchBudget(max_trials=4, sweeps=1))
+        assert plan.category == "true-dependent"  # not iterative any more
+        assert plan.spec_decode and 1 <= plan.spec_k <= 16
+        assert plan.tokens_per_s >= plan.baseline_tokens_per_s
+        # spec_k sits in the sweep order right after the prefill chunk
+        from repro.tuning.search import _DIMS
+        assert "spec_k" in _DIMS
 
     def test_non_streamable_short_circuits(self, served):
         """A decode-dominated workload must come back single-stream: one-
