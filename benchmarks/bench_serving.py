@@ -35,10 +35,18 @@ the draft acceptance rate, proposed-vs-accepted counts, verify steps vs
 plain decode steps, and decode tokens/s for both.  The acceptance bar:
 token parity (always), strictly fewer decode steps, and a tokens/s win
 (wall-clock, asserted only with ``strict``).
+
+Besides the CSV lines on stdout, ``__main__`` writes the same metrics as
+machine-readable JSON (``BENCH_serving.json`` in the working directory, or
+the path given as first argv): one record per metric with its parsed value
+and context note, so dashboards and regression tooling never re-parse the
+CSV prose.
 """
 
 from __future__ import annotations
 
+import json
+import os
 import time
 
 import jax
@@ -295,6 +303,8 @@ def run() -> list[str]:
     eng.submit(prompts[0])  # warm the batched decode/scatter compiles
     eng.run()
     eng.decode_steps = 0  # count only the timed run's batched steps
+    eng.admit_seconds = 0.0
+    eng.admissions = 0
     t0 = time.perf_counter()
     uids = [eng.submit(p) for p in prompts]
     cb_out = eng.run()
@@ -352,6 +362,9 @@ def run() -> list[str]:
         f"serving_speedup,{t_seq / t_cb:.2f},x wall-clock vs sequential",
         f"serving_decode_steps,{eng.decode_steps},batched steps "
         f"(vs {total_tokens} sequential)",
+        f"serving_admit_ms,"
+        f"{eng.admit_seconds / max(1, eng.admissions) * 1e3:.2f},"
+        f"mean queue-pop -> first-token latency ({MAX_BATCH} slots)",
         f"serving_paged_tokens_per_s,{total_tokens / t_paged:.1f},"
         f"paged {pscfg.max_batch} slots block={BLOCK_SIZE} "
         f"({peng.decode_steps} steps)",
@@ -364,6 +377,43 @@ def run() -> list[str]:
     ] + sharing_lines
 
 
+def metrics_json(lines: list[str]) -> dict:
+    """``name,value,note`` CSV lines -> ``{name: {"value", "note"}}``
+    (values parsed to float where they are numbers; notes keep their
+    embedded commas — only the first two commas delimit)."""
+    out = {}
+    for ln in lines:
+        name, value, note = (ln.split(",", 2) + ["", ""])[:3]
+        try:
+            value = float(value)
+        except ValueError:
+            pass  # e.g. tuning_plan carries a knob string, not a number
+        out[name] = {"value": value, "note": note}
+    return out
+
+
+def write_json(lines: list[str], path: str = "BENCH_serving.json") -> str:
+    """Atomic machine-readable dump of a bench run (tmp + rename)."""
+    payload = {
+        "bench": "serving",
+        "arch": ARCH,
+        "schema": 1,
+        "metrics": metrics_json(lines),
+    }
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(payload, f, indent=1, sort_keys=True)
+        f.write("\n")
+    os.replace(tmp, path)
+    return path
+
+
 if __name__ == "__main__":
-    for line in run():
+    import sys
+
+    bench_lines = run()
+    for line in bench_lines:
         print(line)
+    out_path = write_json(
+        bench_lines, *(sys.argv[1:2] or ["BENCH_serving.json"]))
+    print(f"# wrote {out_path}")

@@ -73,13 +73,26 @@ def main() -> None:
     print(f"[serve] decoded {toks.shape[1]} tokens/request: {toks.tolist()[0][:8]}...")
     assert err < 1e-3
 
-    # continuous batching (text-only): a queue of staggered requests through
-    # the shared slot pool matches the one-at-a-time output exactly.
-    if not kw:
+    # continuous batching: a queue of staggered requests through the shared
+    # slot pool matches the one-at-a-time output exactly.  Every servable
+    # arch (transformer, mamba/jamba, whisper with per-request enc_inputs)
+    # rides the same engine behind the ServableModel interface; only the
+    # prefix-LM configs stay on ServingEngine.generate.
+    from repro.runtime.model_iface import arch_kind_of
+    kind = arch_kind_of(cfg)
+    enc = kw.get("enc_inputs")
+
+    def submit_all(e):
+        return [e.submit(
+            np.asarray(tokens[i]),
+            enc_inputs=None if enc is None else np.asarray(enc[i]))
+            for i in range(b)]
+
+    if kind != "prefix_lm":
         cbe = StreamedBatchEngine(cfg, params, ServeConfig(
             max_seq=max_seq, prefill_chunk=args.chunk,
             max_new_tokens=args.new_tokens, max_batch=2))
-        uids = [cbe.submit(np.asarray(tokens[i])) for i in range(b)]
+        uids = submit_all(cbe)
         outs = cbe.run()
         same = all(
             outs[u].tolist() == toks[i].tolist() for i, u in enumerate(uids))
@@ -95,7 +108,7 @@ def main() -> None:
             max_seq=pseq, prefill_chunk=args.chunk,
             max_new_tokens=args.new_tokens, max_batch=2,
             paged=True, block_size=block))
-        puids = [pge.submit(np.asarray(tokens[i])) for i in range(b)]
+        puids = submit_all(pge)
         pouts = pge.run()
         psame = all(
             pouts[u].tolist() == toks[i].tolist()
@@ -107,6 +120,31 @@ def main() -> None:
               f"contiguous")
         assert psame
 
+    # state snapshots (pure-SSM mamba): page-granular prefix sharing is
+    # impossible — the state at position t summarizes all of [0, t) — so
+    # sharing degrades to chunk-aligned state snapshots: admission restores
+    # the longest stored proper prefix and streams only the tail.
+    if kind == "mamba" and all(u.mixer == "mamba" for u in cfg.layer_unit):
+        # longest chunk-aligned proper prefix <= 2 chunks (snapshots only
+        # land on the chunk grid, strictly inside the prompt)
+        head = min(2 * args.chunk, (s - 1) // args.chunk * args.chunk)
+        sh = np.asarray(tokens).copy()
+        sh[1, :head] = sh[0, :head]  # two prompts, one shared 2-chunk head
+        ref_sh = eng.generate(jnp.asarray(sh))
+        sse = StreamedBatchEngine(cfg, params, ServeConfig(
+            max_seq=max_seq, prefill_chunk=args.chunk,
+            max_new_tokens=args.new_tokens, max_batch=2,
+            state_snapshots=True))
+        sn_ids = [sse.submit(sh[i]) for i in range(b)]
+        sn_outs = sse.run()
+        sn_same = all(sn_outs[u].tolist() == ref_sh[i].tolist()
+                      for i, u in enumerate(sn_ids))
+        print(f"[serve] state snapshots: {sse.snapshot_hits} hits, "
+              f"{sse.snapshot_tokens_reused} prompt tokens restored from "
+              f"stored SSM state; token-identical={sn_same}")
+        assert sn_same and (head == 0 or sse.snapshot_hits >= 1)
+
+    if kind == "transformer":
         # prefix sharing: requests with a common system prompt map the same
         # physical pages (the paper's SYNC transfer staged once) and only
         # prefill their unique tails — same tokens, fewer pages.

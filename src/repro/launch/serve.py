@@ -3,9 +3,11 @@
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-4b \
         --requests 4 --prompt-len 128 --new-tokens 16
 
-Text-only archs go through ``StreamedBatchEngine`` (request queue + slot
-pool, chunked prefill interleaved with batched decode); encoder-decoder and
-prefix-LM archs fall back to the single-request ``ServingEngine``.
+Every servable arch — decoder-only transformers, SSMs (mamba2/jamba), and
+encoder-decoder (whisper, per-request ``enc_inputs``) — goes through
+``StreamedBatchEngine`` (request queue + slot pool, chunked prefill
+interleaved with batched decode); prefix-LM archs (paligemma) and
+``--sequential`` fall back to the single-request ``ServingEngine``.
 """
 
 from __future__ import annotations
@@ -71,6 +73,14 @@ def main() -> None:
                          "advance by the accepted prefix per tick")
     ap.add_argument("--spec-k", type=int, default=4,
                     help="draft tokens proposed per verify step")
+    ap.add_argument("--state-snapshots", action="store_true",
+                    help="mamba: reuse chunk-aligned SSM-state snapshots "
+                         "across admissions (the SSM degradation of "
+                         "prefix sharing)")
+    ap.add_argument("--prefix-store", default=None,
+                    help="path: persist the prefix registry across runs "
+                         "(restored at engine construction, saved after "
+                         "the run; needs --prefix-sharing)")
     args = ap.parse_args()
     if args.prefix_sharing and not args.paged:
         ap.error("--prefix-sharing requires --paged")
@@ -95,7 +105,9 @@ def main() -> None:
         prefix_sharing=args.prefix_sharing,
         prefix_min_pages=args.prefix_min_pages,
         spec_decode=args.spec_decode,
-        spec_k=args.spec_k)
+        spec_k=args.spec_k,
+        state_snapshots=args.state_snapshots,
+        prefix_store=args.prefix_store)
 
     b = args.requests
     tokens = jax.random.randint(
@@ -109,12 +121,16 @@ def main() -> None:
             jax.random.PRNGKey(4), (sys_len,), 0, cfg.vocab_size)
         tokens = tokens.at[:, :sys_len].set(sys_tok[None])
 
-    batched = not (cfg.is_encoder_decoder or cfg.prefix_len or args.sequential)
+    enc_inputs = None
+    if cfg.is_encoder_decoder:  # whisper: per-request encoded-audio prefix
+        enc_inputs = 0.1 * jax.random.normal(
+            jax.random.PRNGKey(2), (b, cfg.encoder_seq, cfg.d_model))
+
+    batched = not (cfg.prefix_len or args.sequential)
     if not batched:
         kw = {}
-        if cfg.is_encoder_decoder:
-            kw["enc_inputs"] = 0.1 * jax.random.normal(
-                jax.random.PRNGKey(2), (b, cfg.encoder_seq, cfg.d_model))
+        if enc_inputs is not None:
+            kw["enc_inputs"] = enc_inputs
         if cfg.prefix_len:
             kw["prefix_embeds"] = 0.1 * jax.random.normal(
                 jax.random.PRNGKey(3), (b, cfg.prefix_len, cfg.d_model))
@@ -154,8 +170,13 @@ def main() -> None:
                   f"{plan.baseline_tokens_per_s:.1f} analytic; db {db.path})")
         eng = StreamedBatchEngine(cfg, params, scfg, plan=plan)
         t0 = time.perf_counter()
-        uids = [eng.submit(np.asarray(tokens[i])) for i in range(b)]
+        uids = [eng.submit(
+            np.asarray(tokens[i]),
+            enc_inputs=(None if enc_inputs is None
+                        else np.asarray(enc_inputs[i])))
+            for i in range(b)]
         outs = eng.run()
+        saved = eng.save_prefixes()
         dt = time.perf_counter() - t0
         rows = [outs[u].tolist() for u in uids]
         total_new = sum(len(r) for r in rows)
@@ -172,6 +193,12 @@ def main() -> None:
                          f"({eng.prefix_pages_shared * st.page_bytes}B of "
                          f"prefill copies avoided, "
                          f"{eng.kv.cow_forks} COW forks)")
+            if args.prefix_store:
+                mode += (f", prefix-store {eng.prefixes_restored} restored"
+                         f" / {saved} saved")
+        if args.state_snapshots:
+            mode += (f", state-snapshots {eng.snapshot_hits} hits / "
+                     f"{eng.snapshot_tokens_reused} prompt tokens skipped")
         if args.spec_decode:
             rate = eng.spec_accepted / max(1, eng.spec_proposed)
             decoded = total_new - eng.admissions  # first tokens are prefill's

@@ -80,9 +80,19 @@ def apply_rope(x: jax.Array, sin: jax.Array, cos: jax.Array) -> jax.Array:
 
 def sinusoidal_positions(seq: int, d_model: int, dtype) -> jax.Array:
     """Whisper-style fixed sinusoidal embeddings (S, D)."""
+    return sinusoidal_positions_at(
+        jnp.arange(seq, dtype=jnp.float32), d_model, dtype)
+
+
+def sinusoidal_positions_at(positions: jax.Array, d_model: int, dtype) -> jax.Array:
+    """Sinusoidal embeddings at (possibly traced) positions: (..., D).
+
+    Row ``p`` matches ``sinusoidal_positions(seq, ...)[p]`` bitwise, so
+    decode steps can look up the embedding for a dynamic position.
+    """
     half = d_model // 2
     freqs = jnp.exp(-math.log(10000.0) * jnp.arange(half, dtype=jnp.float32) / max(1, half - 1))
-    ang = jnp.arange(seq, dtype=jnp.float32)[:, None] * freqs[None, :]
+    ang = positions.astype(jnp.float32)[..., None] * freqs
     return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1).astype(dtype)
 
 

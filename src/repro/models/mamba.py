@@ -45,7 +45,19 @@ def ssd_chunked(
     bsz, s, h, p = x.shape
     n = b_.shape[-1]
     chunk = min(chunk, s)
-    assert s % chunk == 0, (s, chunk)
+    if s % chunk:
+        # Ragged tail (a prefill chunk grid need not tile the SSD chunk):
+        # scan the aligned head, then carry the state through one short
+        # tail chunk.  Bitwise identical to the aligned path when s % chunk
+        # == 0 (this branch is never taken).
+        main = (s // chunk) * chunk
+        y_head, state = ssd_chunked(
+            x[:, :main], dt[:, :main], a, b_[:, :main], c_[:, :main],
+            chunk=chunk, init_state=init_state)
+        y_tail, state = ssd_chunked(
+            x[:, main:], dt[:, main:], a, b_[:, main:], c_[:, main:],
+            chunk=s - main, init_state=state)
+        return jnp.concatenate([y_head, y_tail], axis=1), state
     t = s // chunk
 
     f32 = jnp.float32

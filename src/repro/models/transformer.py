@@ -273,12 +273,10 @@ def init_paged_cache(
     through a per-slot page table (see ``repro.runtime.kv_cache``).  Block 0
     is conventionally the trash page (free slots' padding writes land there).
     Mamba SSM/conv states are O(1) per slot and stay slot-indexed, exactly as
-    in :func:`init_cache`.
+    in :func:`init_cache`; so do encoder-decoder cross-attention K/V, which
+    are fixed-size (encoder_seq) per slot and prefill-computed — nothing to
+    page, everything to evict/readmit as opaque per-slot state.
     """
-    if cfg.is_encoder_decoder:
-        raise NotImplementedError(
-            "paged caches serve decoder-only models; cross-attention KV is "
-            "prefill-computed and has no paging to gain from")
     r = cfg.n_repeats
     dt = cfg.compute_dtype
     cache: Params = {"blocks": {}}
@@ -295,6 +293,10 @@ def init_paged_cache(
             c["ssm"] = jnp.zeros(
                 (r, bsz, n_heads, cfg.mamba_headdim, cfg.ssm_state), jnp.float32)
             c["conv"] = jnp.zeros((r, bsz, mamba.CONV_WIDTH - 1, conv_dim), dt)
+        if spec.cross_attn:
+            shape = (r, bsz, cfg.encoder_seq, cfg.n_kv_heads, cfg.head_dim)
+            c["cross_k"] = jnp.zeros(shape, dt)
+            c["cross_v"] = jnp.zeros(shape, dt)
         cache["blocks"][f"layer{i}"] = c
     return cache
 
@@ -557,6 +559,21 @@ def prefill(
     return logits, caches
 
 
+def _add_decode_positions(
+    cfg: ModelConfig, h: jax.Array, positions: jax.Array
+) -> jax.Array:
+    """Absolute sinusoidal embeddings at traced decode positions.
+
+    Prefill adds them in ``_prepare_inputs``; decode must add the same rows
+    at each slot's live position or sinusoidal models (whisper) decode with
+    no position signal at all.  No-op for rope/NoPE configs.
+    """
+    if not cfg.sinusoidal_pos:
+        return h
+    return h + layers.sinusoidal_positions_at(
+        positions, cfg.d_model, cfg.compute_dtype)
+
+
 def decode_step(
     cfg: ModelConfig, params: Params, tokens: jax.Array, caches: Params,
     cur_len: jax.Array,
@@ -569,6 +586,7 @@ def decode_step(
     """
     h = meshutil.shard_batch(_embed_tokens(cfg, params, tokens))
     positions = cur_len[None] if jnp.ndim(cur_len) == 0 else cur_len[:, None]
+    h = _add_decode_positions(cfg, h, positions)
     h, caches, _ = forward_hidden(
         cfg, params, h, positions=positions, caches=caches, cur_len=cur_len)
     h = layers.rmsnorm(params["final_norm"], h)
@@ -591,6 +609,7 @@ def decode_step_paged(
     """
     assert jnp.ndim(cur_len) == 1, "paged decode needs per-slot positions"
     h = meshutil.shard_batch(_embed_tokens(cfg, params, tokens))
+    h = _add_decode_positions(cfg, h, cur_len[:, None])
     h, caches, _ = forward_hidden(
         cfg, params, h, positions=cur_len[:, None], caches=caches,
         cur_len=cur_len, page_table=page_table, paged_kernel=paged_kernel)
@@ -640,6 +659,7 @@ def decode_step_multi(
     t = tokens.shape[1]
     h = meshutil.shard_batch(_embed_tokens(cfg, params, tokens))
     positions = cur_len[:, None] + jnp.arange(t)[None, :]
+    h = _add_decode_positions(cfg, h, positions)
     h, caches, _ = forward_hidden(
         cfg, params, h, positions=positions, caches=caches, cur_len=cur_len)
     h = layers.rmsnorm(params["final_norm"], h)
@@ -661,6 +681,7 @@ def decode_step_multi_paged(
     t = tokens.shape[1]
     h = meshutil.shard_batch(_embed_tokens(cfg, params, tokens))
     positions = cur_len[:, None] + jnp.arange(t)[None, :]
+    h = _add_decode_positions(cfg, h, positions)
     h, caches, _ = forward_hidden(
         cfg, params, h, positions=positions, caches=caches, cur_len=cur_len,
         page_table=page_table, paged_kernel=paged_kernel)

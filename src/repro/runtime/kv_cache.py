@@ -46,6 +46,9 @@ from __future__ import annotations
 import collections
 import dataclasses
 import hashlib
+import json
+import os
+import pathlib
 from typing import Any
 
 import jax
@@ -54,6 +57,10 @@ import numpy as np
 
 from repro.models import transformer as T
 from repro.models.transformer import ModelConfig
+
+#: On-disk prefix-store schema; bump when the npz layout changes.  A
+#: mismatched file is ignored wholesale (cold start), never misread.
+PREFIX_STORE_SCHEMA = 1
 
 TRASH_PAGE = 0  # physical block 0: sink for padding writes, never allocated
 
@@ -187,6 +194,11 @@ class PrefixRegistry:
         """Distinct blocks the registry holds a retention reference on."""
         return len(self._block_use)
 
+    def entries(self) -> list[tuple[bytes, list[int]]]:
+        """(token bytes, blocks) per entry, LRU-oldest first — the
+        persistence view (``PagedKVCache.save_prefixes``)."""
+        return [(tb, list(blocks)) for tb, blocks in self._entries.values()]
+
     @staticmethod
     def _digest(token_bytes: bytes) -> bytes:
         return hashlib.sha1(token_bytes).digest()
@@ -286,6 +298,101 @@ class PrefixRegistry:
         for d in stranded:
             released += self._release(self._entries.pop(d)[1])
         return released
+
+
+def _config_digest(cfg: Any) -> str:
+    """Stable hash over every ModelConfig field (dtypes by canonical name).
+
+    The prefix store's staleness key: saved page contents are only valid
+    for the exact model geometry/dtype they were computed under.  (Same
+    recipe as ``tuning.db._config_digest``; duplicated because the runtime
+    never imports the tuner.)
+    """
+
+    def norm(v):
+        if isinstance(v, (list, tuple)):
+            return [norm(x) for x in v]
+        if dataclasses.is_dataclass(v) and not isinstance(v, type):
+            return {k: norm(x)
+                    for k, x in sorted(dataclasses.asdict(v).items())}
+        try:
+            return np.dtype(v).name
+        except TypeError:
+            return v
+
+    fields = {f.name: norm(getattr(cfg, f.name))
+              for f in dataclasses.fields(cfg)}
+    blob = json.dumps(fields, sort_keys=True, default=str)
+    return hashlib.sha1(blob.encode()).hexdigest()
+
+
+class StateStore:
+    """Host-side LRU map: chunk-aligned prompt prefix -> recurrent-state
+    snapshot (the ``MambaServable`` analog of the prefix registry).
+
+    Attention prefixes share *pages* — position-granular KV rows that any
+    aligned proper prefix of them can reuse.  A recurrent SSM compresses
+    the whole prefix into O(1) state, so the only shareable artifact is a
+    *snapshot* of that state at a known token boundary: an admission whose
+    prompt extends a stored prefix restores the snapshot and streams only
+    the uncovered tail (prefix sharing "degrades to snapshot reuse at
+    aligned boundaries").  Snapshots are host copies — device pools never
+    hold them — and boundaries are restricted to multiples of the prefill
+    chunk so a resumed prefill dispatches the exact chunk tasks a full
+    prefill would (bitwise token parity, same argument as the page path).
+    """
+
+    def __init__(self, max_entries: int = 32):
+        if max_entries < 1:
+            raise ValueError(
+                f"max_entries must be >= 1, got {max_entries}")
+        self.max_entries = max_entries
+        # digest -> (token bytes, n_tokens, host state pytree)
+        self._entries: collections.OrderedDict[
+            bytes, tuple[bytes, int, Any]] = collections.OrderedDict()
+        self.hits = 0
+        self.misses = 0
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def put(self, tokens: np.ndarray, snapshot: Any) -> None:
+        """Store a host snapshot for ``tokens`` (LRU-bounded; an existing
+        entry for the same tokens is refreshed in place)."""
+        tokens = np.ascontiguousarray(np.asarray(tokens, np.int32))
+        tb = tokens.tobytes()
+        d = hashlib.sha1(tb).digest()
+        self._entries[d] = (tb, int(tokens.size), snapshot)
+        self._entries.move_to_end(d)
+        while len(self._entries) > self.max_entries:
+            self._entries.popitem(last=False)
+
+    def lookup(
+        self, tokens: np.ndarray, *, align_tokens: int,
+    ) -> tuple[int, Any]:
+        """Longest stored chunk-aligned *proper* prefix of ``tokens``.
+
+        Returns (n_tokens, snapshot); (0, None) on miss.  Stored bytes are
+        compared on hit, so a digest collision can never alias prefixes.
+        The whole descent counts as one logical lookup.
+        """
+        if align_tokens < 1:
+            raise ValueError(
+                f"align_tokens must be >= 1, got {align_tokens}")
+        tokens = np.ascontiguousarray(np.asarray(tokens, np.int32))
+        top = ((tokens.size - 1) // align_tokens) * align_tokens
+        for n in range(top, 0, -align_tokens):
+            tb = tokens[:n].tobytes()
+            entry = self._entries.get(hashlib.sha1(tb).digest())
+            if entry is not None and entry[0] == tb:
+                self._entries.move_to_end(hashlib.sha1(tb).digest())
+                self.hits += 1
+                return entry[1], entry[2]
+        self.misses += 1
+        return 0, None
+
+    def clear(self) -> None:
+        self._entries.clear()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -618,6 +725,134 @@ class PagedKVCache:
         before = len(self.registry)
         self.allocator.free(self.registry.drop_stranded(align_tokens))
         return before - len(self.registry)
+
+    # -- prefix persistence (registry survives engine rebuilds) ----------------
+
+    def save_prefixes(self, path: str | os.PathLike) -> int:
+        """Serialize the prefix registry — token keys, block lists, and the
+        referenced page contents — to ``path`` (npz, atomic replace).
+
+        Stored next to the tuning db so a later engine serving the same
+        model warm-starts sharing instead of re-prefilling every common
+        prefix.  Returns entries written; 0 writes nothing and leaves any
+        existing file untouched (an empty registry is not worth a file).
+        """
+        entries = self.registry.entries()
+        if not entries:
+            return 0
+        distinct: list[int] = []
+        seen: set[int] = set()
+        for _, blocks in entries:
+            for b in blocks:
+                if b not in seen:
+                    seen.add(b)
+                    distinct.append(b)
+        arrays: dict[str, np.ndarray] = {}
+        idx = np.asarray(distinct, np.int64)
+        for name, c in self.pools["blocks"].items():
+            for key in ("k", "v"):
+                if key in c:
+                    arrays[f"pool.{name}.{key}"] = np.asarray(c[key][:, idx])
+        for i, (tb, blocks) in enumerate(entries):
+            arrays[f"entry{i}.tokens"] = np.frombuffer(tb, np.int32)
+            arrays[f"entry{i}.blocks"] = np.asarray(blocks, np.int64)
+        meta = {
+            "schema": PREFIX_STORE_SCHEMA,
+            "model": _config_digest(self.cfg),
+            "block_size": self.block_size,
+            "blocks": distinct,
+            "n_entries": len(entries),
+        }
+        arrays["meta"] = np.frombuffer(
+            json.dumps(meta, sort_keys=True).encode(), np.uint8)
+        path = pathlib.Path(path)
+        path.parent.mkdir(parents=True, exist_ok=True)
+        tmp = path.with_name(path.name + ".tmp")
+        with open(tmp, "wb") as f:
+            np.savez(f, **arrays)
+        os.replace(tmp, path)
+        return len(entries)
+
+    def load_prefixes(self, path: str | os.PathLike) -> int:
+        """Restore a saved prefix registry into this pool.
+
+        Stale or unreadable stores are skipped wholesale (returns 0): the
+        meta block pins the store schema, the model-config digest, and the
+        block size, and every page array's shape is checked against the
+        live pool before any block is allocated.  Saved block ids are
+        remapped onto freshly allocated blocks; each restored block carries
+        exactly one allocator reference — the registry's retention ref —
+        so reclaim and COW behave as if the prefixes had been registered
+        by a slot that since retired.  Returns entries restored.
+        """
+        path = pathlib.Path(path)
+        if not path.exists():
+            return 0
+        try:
+            data = np.load(path, allow_pickle=False)
+        except (OSError, ValueError):
+            return 0
+        try:
+            if "meta" not in data:
+                return 0
+            meta = json.loads(bytes(data["meta"].tobytes()))
+            if (meta.get("schema") != PREFIX_STORE_SCHEMA
+                    or meta.get("model") != _config_digest(self.cfg)
+                    or meta.get("block_size") != self.block_size):
+                return 0
+            old_ids = [int(b) for b in meta.get("blocks", [])]
+            old_set = set(old_ids)
+            n = len(old_ids)
+            if n == 0 or len(old_set) != n:
+                return 0
+            pages: dict[tuple[str, str], np.ndarray] = {}
+            for name, c in self.pools["blocks"].items():
+                for key in ("k", "v"):
+                    if key not in c:
+                        continue
+                    akey = f"pool.{name}.{key}"
+                    if akey not in data:
+                        return 0
+                    arr = data[akey]
+                    leaf = c[key]
+                    want = (leaf.shape[0], n) + tuple(leaf.shape[2:])
+                    if tuple(arr.shape) != want:
+                        return 0
+                    pages[(name, key)] = arr
+            raw_entries: list[tuple[np.ndarray, list[int]]] = []
+            for i in range(int(meta.get("n_entries", 0))):
+                toks = np.asarray(data[f"entry{i}.tokens"], np.int32)
+                blocks = [int(b) for b in data[f"entry{i}.blocks"]]
+                if not blocks or any(b not in old_set for b in blocks):
+                    return 0
+                raw_entries.append((toks, blocks))
+        except (KeyError, ValueError):
+            return 0
+        finally:
+            data.close()
+        if not raw_entries:
+            return 0
+        new = self.allocator.alloc(n)
+        if new is None:  # pool too small for the store: cold start
+            return 0
+        mapping = dict(zip(old_ids, new))
+        nidx = np.asarray(new, np.int64)
+        for (name, key), arr in pages.items():
+            leaf = self.pools["blocks"][name][key]
+            self.pools["blocks"][name][key] = leaf.at[:, nidx].set(
+                jnp.asarray(arr, leaf.dtype))
+        new_set = set(new)
+        released_ext: list[int] = []
+        for toks, blocks in raw_entries:  # oldest first: LRU order survives
+            _, released = self.registry.put(
+                toks, [mapping[b] for b in blocks])
+            # alloc's refcount *is* the retention ref — no incref here;
+            # blocks outside this restore batch settle in the final sweep.
+            released_ext += [b for b in released if b not in new_set]
+        use = self.registry._block_use
+        self.allocator.free([b for b in released_ext if b not in use])
+        self.allocator.free([b for b in new if b not in use])
+        return len(raw_entries)
 
     # -- page scatter / gather / copy (admission, evict, readmit, COW) ---------
 

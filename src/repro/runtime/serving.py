@@ -147,6 +147,15 @@ class ServeConfig:
     # to its geometry (distinct pos0 offsets / admission page counts)
     chunk_jit_cap: int | None = None  # per-(len, first, pos0) prefill fns
     page_jit_cap: int | None = None  # per-n_pages scatter/gather/load fns
+    # model-agnostic serving (runtime.model_iface): build_servable stamps
+    # arch_kind from the model config and re-validates; setting it up
+    # front validates arch-dependent flags before a model is in hand
+    arch_kind: str | None = None  # "transformer" | "mamba" | "whisper"
+    state_snapshots: bool = False  # mamba: reuse chunk-aligned SSM-state
+    # snapshots across admissions (the SSM degradation of prefix sharing)
+    prefix_store: str | None = None  # path: persist the prefix registry
+    # across engine rebuilds (restored at construction, saved via
+    # engine.save_prefixes; stale stores are ignored wholesale)
 
     def __post_init__(self) -> None:
         if self.paged_kernel is None:
@@ -197,6 +206,53 @@ class ServeConfig:
                 raise ValueError(
                     f"num_blocks must be >= 2 (block 0 is the trash page), "
                     f"got {self.num_blocks}")
+        if self.prefix_store is not None and not self.prefix_sharing:
+            raise ValueError(
+                "prefix_store persists the prefix registry; it requires "
+                "prefix_sharing=True")
+        self.validate_arch()
+
+    def validate_arch(self) -> None:
+        """Arch-dependent flag validation: actionable errors at config
+        time, not a crash deep in the tick loop.  No-op until ``arch_kind``
+        is stamped — ``model_iface.build_servable`` re-runs it with the
+        model in hand, so a ServeConfig built before the model was known
+        still fails fast at engine construction."""
+        kind = self.arch_kind
+        if kind is None:
+            return
+        if kind not in ("transformer", "mamba", "whisper"):
+            raise ValueError(
+                f"unknown arch_kind {kind!r}; expected "
+                "transformer | mamba | whisper")
+        if kind == "mamba":
+            if self.prefix_sharing:
+                raise NotImplementedError(
+                    "prefix sharing maps attention KV pages; mamba/hybrid "
+                    "archs carry per-slot SSM state with no page-granular "
+                    "snapshot — state_snapshots=True gives the "
+                    "chunk-aligned state-reuse degradation instead")
+            if self.spec_decode:
+                raise NotImplementedError(
+                    "speculative decode rolls rejected positions back by "
+                    "masking KV writes; mamba/hybrid archs advance "
+                    "irreversible per-slot SSM state")
+        if kind == "whisper":
+            if self.prefix_sharing:
+                raise NotImplementedError(
+                    "prefix sharing keys pages by prompt tokens alone, but "
+                    "whisper's self-attention KV depends on each request's "
+                    "encoder output — identical text prefixes are not "
+                    "shareable across requests")
+            if self.spec_decode:
+                raise NotImplementedError(
+                    "speculative decode needs the multi-token verify step, "
+                    "which has no cross-attention path; serve "
+                    "encoder-decoder configs with spec_decode=False")
+        if self.state_snapshots and kind != "mamba":
+            raise ValueError(
+                "state_snapshots reuse recurrent SSM state across "
+                f"admissions; arch_kind={kind!r} carries none (mamba only)")
 
 
 # Chunk fns specialize per (len, first, pos0); shared-prefix tails admit at
@@ -382,6 +438,9 @@ class Request:
     uid: int
     tokens: np.ndarray  # (prompt_len,) int32
     max_new_tokens: int
+    enc_inputs: np.ndarray | None = None  # encoder-decoder only: this
+    # request's encoded frames (1, encoder_seq, d_model) — the SYNC stage
+    # input, staged once at admission
 
 
 @dataclasses.dataclass
@@ -544,39 +603,34 @@ class StreamedBatchEngine:
         # engine builds; duck-typed so the runtime never imports the tuner.
         if plan is not None:
             scfg = plan.apply(scfg)
-        if cfg.is_encoder_decoder or cfg.prefix_len > 0:
-            raise NotImplementedError(
-                "continuous batching currently serves text-only requests; "
-                "use ServingEngine for encoder-decoder / prefix-LM")
         if scfg.max_batch < 1:
             raise ValueError(  # an empty slot pool would spin forever
                 f"max_batch must be >= 1, got {scfg.max_batch}")
-        if scfg.prefix_sharing and any(
-                spec.mixer == "mamba" for spec in cfg.layer_unit):
-            raise NotImplementedError(
-                "prefix sharing maps attention KV pages; mamba/hybrid archs "
-                "carry per-slot SSM state with no page-granular snapshot")
-        if scfg.spec_decode and any(
-                spec.mixer == "mamba" for spec in cfg.layer_unit):
-            raise NotImplementedError(
-                "speculative decode rolls rejected positions back by "
-                "masking KV writes; mamba/hybrid archs advance irreversible "
-                "per-slot SSM state")
+        # Everything architecture-specific — slot state layout, prefill
+        # chain, decode step, what is shareable — lives behind the
+        # servable (runtime.model_iface).  build_servable stamps
+        # scfg.arch_kind, validates arch-dependent flags, and rejects
+        # still-unserved archs (prefix-LM) before touching params.
+        # Imported lazily: model_iface imports this module eagerly.
+        from repro.runtime.model_iface import build_servable
         self.cfg = cfg
         self.params = params
         self.scfg = scfg
-        self.single = ServingEngine(cfg, params, scfg)  # b=1 prefill machinery
+        self.servable = build_servable(cfg, params, scfg)
+        self.single = self.servable.single  # b=1 prefill machinery
         b = scfg.max_batch
         self.paged = scfg.paged
+        self.prefixes_restored = 0  # registry entries warm-started from
+        # scfg.prefix_store (0 = cold start or stale/absent store)
         if self.paged:
-            self.kv = PagedKVCache(
-                cfg, max_batch=b, max_seq=scfg.max_seq,
-                block_size=scfg.block_size, num_blocks=scfg.num_blocks,
-                jit_cache_cap=scfg.page_jit_cap)
+            self.kv = self.servable.make_kv_pool()
             self.caches = None  # KV lives in self.kv.pools
+            if scfg.prefix_sharing and scfg.prefix_store:
+                self.prefixes_restored = self.kv.load_prefixes(
+                    scfg.prefix_store)
         else:
             self.kv = None
-            self.caches = T.init_cache(cfg, b, scfg.max_seq, ring=False)
+            self.caches = self.servable.init_slot_caches(b)
         self.slots = [_Slot(index=i) for i in range(b)]
         self.queue: collections.deque[Request] = collections.deque()
         self._preempted: collections.deque[EvictedRequest] = (
@@ -595,6 +649,9 @@ class StreamedBatchEngine:
         # of prefill chunks, which is exactly what prefix sharing cuts.
         self.prefix_hits = 0  # admissions that mapped a shared prefix
         self.prefix_pages_shared = 0  # pages mapped instead of prefilled
+        self.snapshot_hits = 0  # admissions that restored an SSM-state
+        # snapshot (mamba state_snapshots — sharing's SSM degradation)
+        self.snapshot_tokens_reused = 0  # prompt tokens never re-prefilled
         self.readmit_prefix_hits = 0  # readmissions that re-mapped their
         # registered prefix (pages shared again instead of re-scattered)
         self.readmit_prefix_pages = 0  # pages re-mapped on readmission
@@ -611,33 +668,11 @@ class StreamedBatchEngine:
         # handed to _admit (avoids a second lookup; valid because nothing
         # runs between gate and admission)
 
-        # Decode step with on-device sampling fused in: a tick moves one
-        # int32 per slot to the host, never the (B, vocab) logits.  With
+        # Decode step with on-device sampling fused in (the servable owns
+        # the jit — see ServableModel.decode_fn): a tick moves one int32
+        # per slot to the host, never the (B, vocab) logits.  With
         # temperature, per-slot keys are folded from (uid, step) on device.
-        temp = float(scfg.temperature)
-
-        def _keys(uids, steps):
-            return jax.vmap(slot_key)(uids, steps)
-
-        if self.paged:
-            kern = scfg.paged_kernel
-            if temp > 0.0:
-                self._decode_jit = jax.jit(
-                    lambda p, t, c, pt, l, u, s: T.decode_and_sample_paged(
-                        cfg, p, t, c, pt, l, temperature=temp,
-                        key=_keys(u, s), paged_kernel=kern))
-            else:
-                self._decode_jit = jax.jit(
-                    lambda p, t, c, pt, l: T.decode_and_sample_paged(
-                        cfg, p, t, c, pt, l, paged_kernel=kern))
-        else:
-            if temp > 0.0:
-                self._decode_jit = jax.jit(
-                    lambda p, t, c, l, u, s: T.decode_and_sample(
-                        cfg, p, t, c, l, temperature=temp, key=_keys(u, s)))
-            else:
-                self._decode_jit = jax.jit(
-                    lambda p, t, c, l: T.decode_and_sample(cfg, p, t, c, l))
+        self._decode_jit = self.servable.decode_fn(paged=self.paged)
         # Scatter one request's (b=1) cache into slot i of the global cache /
         # gather it back out (contiguous path; the paged engine moves pages
         # through self.kv instead).  Slot index is traced, so one compile
@@ -656,17 +691,19 @@ class StreamedBatchEngine:
             from repro.runtime import spec as _spec
             self.drafter = (drafter if drafter is not None
                             else _spec.NGramDrafter(max_n=scfg.spec_ngram))
-            self._spec_jit = _spec.make_verifier(
-                cfg, paged=self.paged, temperature=temp,
-                paged_kernel=scfg.paged_kernel)
+            self._spec_jit = self.servable.make_verifier(paged=self.paged)
 
     # -- queue ----------------------------------------------------------------
 
-    def submit(self, tokens, max_new_tokens: int | None = None) -> int:
-        """Queue one prompt; returns its uid."""
+    def submit(self, tokens, max_new_tokens: int | None = None,
+               *, enc_inputs=None) -> int:
+        """Queue one prompt; returns its uid.  ``enc_inputs`` carries the
+        per-request encoder input for encoder-decoder servables (rejected
+        elsewhere — the servable validates)."""
         tokens = np.asarray(tokens, np.int32).reshape(-1)
         if tokens.size == 0:
             raise ValueError("prompt must contain at least one token")
+        enc_inputs = self.servable.validate_request(tokens, enc_inputs)
         max_new = (self.scfg.max_new_tokens if max_new_tokens is None
                    else max_new_tokens)
         if max_new < 1:
@@ -687,7 +724,7 @@ class StreamedBatchEngine:
                     f"shrink the request")
         uid = self._next_uid
         self._next_uid += 1
-        self.queue.append(Request(uid, tokens, max_new))
+        self.queue.append(Request(uid, tokens, max_new, enc_inputs))
         return uid
 
     @property
@@ -757,19 +794,30 @@ class StreamedBatchEngine:
             # the trash block, not into the reserved (possibly shared) pages.
             self.kv.shield(slot.index)
         shared_len = shared_pages * self.scfg.block_size
-        tokens = jnp.asarray(req.tokens[None, shared_len:], jnp.int32)
         caches0 = None
         if shared_len:
             # The tail's b=1 prefill context: shared pages gathered into the
             # front of a fresh full-length cache.  The pool pages themselves
             # are never rewritten — the slot reads them through its table.
             caches0 = self.kv.load_prefix(
-                T.init_cache(self.cfg, 1, self.scfg.max_seq, ring=False),
+                self.servable.init_request_cache(),
                 self.kv.slot_pages(slot.index)[:shared_pages])
+        elif self.servable.snapshots is not None:
+            # The SSM degradation of prefix sharing: restore the longest
+            # chunk-aligned state snapshot of the prompt and stream only
+            # the uncovered tail (same chunk-grid parity argument as the
+            # page path — the resumed prefill dispatches identical tasks).
+            n, caches0 = self.servable.lookup_snapshot(req.tokens)
+            if n:
+                shared_len = n
+                self.snapshot_hits += 1
+                self.snapshot_tokens_reused += n
+        tokens = jnp.asarray(req.tokens[None, shared_len:], jnp.int32)
         logits = caches = None
         pos = shared_len
-        for logits, caches, pos in self.single.iter_prefill_chunks(
-                tokens, caches=caches0, pos0=shared_len):
+        for logits, caches, pos in self.servable.iter_prefill_chunks(
+                req, tokens, caches=caches0, pos0=shared_len):
+            self.servable.maybe_snapshot(req.tokens, caches, pos)
             # Chunk is dispatched (async); decode the active slots while it
             # is in flight — prefill chunk t+1 overlapping decode compute.
             for _ in range(self.scfg.decode_interleave):
@@ -1185,11 +1233,13 @@ class StreamedBatchEngine:
         """
         chunk = min(self.scfg.prefill_chunk, prompt_len)
         toks = jnp.zeros((1, chunk), jnp.int32)
-        caches = T.init_cache(self.cfg, 1, self.scfg.max_seq, ring=False)
+        caches = self.servable.init_request_cache()
+        enc0 = self.servable.probe_enc_out()  # encoder-decoder: the chunk
+        # fn cross-attends a (zero) encoder output; None elsewhere
         fn = self.single._prefill_chunk_fn(chunk, True, 0)
-        jax.block_until_ready(fn(self.params, caches, toks, None, None))
+        jax.block_until_ready(fn(self.params, caches, toks, enc0, None))
         t0 = time.perf_counter()
-        jax.block_until_ready(fn(self.params, caches, toks, None, None))
+        jax.block_until_ready(fn(self.params, caches, toks, enc0, None))
         t_chunk = time.perf_counter() - t0
 
         b = self.scfg.max_batch
@@ -1229,6 +1279,10 @@ class StreamedBatchEngine:
             # match a lookup on the new one: drop them now instead of
             # letting them pin pages until pool pressure reclaims them.
             self.kv.clear_stranded_prefixes(self.scfg.prefill_chunk)
+        if chunk_changed and self.servable.snapshots is not None:
+            # Same staleness for SSM-state snapshots: boundaries sit on
+            # the old chunk grid and the lookup only probes the new one.
+            self.servable.snapshots.clear()
         if (self.paged and plan.block_size != self.scfg.block_size
                 and not self.active_slots and self._evicted_out == 0
                 and len(self.kv.registry)):
@@ -1248,8 +1302,14 @@ class StreamedBatchEngine:
                 rows = self.kv.allocator.capacity * self.kv.block_size
                 self.scfg.num_blocks = rows // plan.block_size + 1
             self.scfg.block_size = plan.block_size
-            self.kv = PagedKVCache(
-                self.cfg, max_batch=self.scfg.max_batch,
-                max_seq=self.scfg.max_seq, block_size=plan.block_size,
-                num_blocks=self.scfg.num_blocks)
+            self.kv = self.servable.make_kv_pool()
         return plan
+
+    def save_prefixes(self) -> int:
+        """Persist the prefix registry to ``scfg.prefix_store`` — the
+        other half of the construction-time restore.  Returns entries
+        written (0 without a store path or outside paged sharing)."""
+        if not (self.paged and self.scfg.prefix_sharing
+                and self.scfg.prefix_store):
+            return 0
+        return self.kv.save_prefixes(self.scfg.prefix_store)

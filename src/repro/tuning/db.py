@@ -36,7 +36,9 @@ from repro.tuning.workload import WorkloadDescriptor
 #: mismatch makes readers re-tune instead of misapplying old records.
 #: v2: speculative decode joined the knob layout (spec_decode mode flag +
 #: tuned spec_k) — v1 records predate the verify step entirely.
-SCHEMA_VERSION = 2
+#: v3: the serving mode grew the servable arch kind + state_snapshots
+#: (model-agnostic engine) — v2 records were all implicitly transformer.
+SCHEMA_VERSION = 3
 
 _DEFAULT_MAX_ENTRIES = 256
 
@@ -80,6 +82,12 @@ def serving_mode(scfg: Any) -> dict:
         "prefix_sharing": bool(scfg.prefix_sharing),
         "greedy": scfg.temperature == 0.0,
         "spec_decode": bool(getattr(scfg, "spec_decode", False)),
+        # The servable arch changes what admission/decode actually execute
+        # (SSM state chain, whisper SYNC encode), so knobs never cross it.
+        # The model digest already separates archs; the explicit kind keeps
+        # the mode readable and covers kind-specific flags.
+        "arch": getattr(scfg, "arch_kind", None),
+        "state_snapshots": bool(getattr(scfg, "state_snapshots", False)),
     }
 
 

@@ -103,11 +103,10 @@ def profile_engine(
 
     scatter_s = gather_s = 0.0
     if eng.paged:
-        from repro.models import transformer as T
         slot = next((s.index for s in eng.slots if s.free), None)
         if slot is not None and eng.kv.alloc(slot, eng.kv.block_size):
             rows = eng.kv.block_size
-            src = T.init_cache(eng.cfg, 1, eng.scfg.max_seq, ring=False)
+            src = eng.servable.init_request_cache()
             eng.kv.scatter(slot, src, rows)  # warm the jitted path
             jax.block_until_ready(eng.kv.pools)
             scatter_s = _timed(

@@ -34,6 +34,7 @@ from typing import Any
 import jax
 import numpy as np
 
+from repro.runtime.model_iface import arch_kind_of
 from repro.runtime.serving import StreamedBatchEngine, plan_decode_policy
 from repro.tuning import profiler as prof
 from repro.tuning.db import TunedPlan, fingerprint
@@ -166,8 +167,11 @@ def search_tuned_plan(
         stage_times, prompt_len=desc.prompt_len_mean, max_seq=scfg.max_seq)
     category = classify_workload(
         desc, prefill_chunk=analytic.prefill_chunk,
-        prefix_staged=scfg.prefix_sharing,
-        spec_decode=scfg.spec_decode, spec_k=scfg.spec_k)
+        # staged = the prefix leaves per-task read sets: page sharing for
+        # attention archs, state snapshots for SSMs
+        prefix_staged=scfg.prefix_sharing or scfg.state_snapshots,
+        spec_decode=scfg.spec_decode, spec_k=scfg.spec_k,
+        arch=arch_kind_of(cfg))
     streamable = category.streamable
     say(f"[tune] calibrated chunk={profile.chunk_s * 1e3:.2f}ms "
         f"decode={profile.decode_s * 1e3:.2f}ms -> {analytic.decision}, "

@@ -173,28 +173,46 @@ def synth_prompts(
 def to_task_graph(
     desc: WorkloadDescriptor, *, prefill_chunk: int,
     prefix_staged: bool = False, spec_decode: bool = False, spec_k: int = 0,
+    arch: str = "transformer",
 ) -> dep.Workload:
     """The dependency graph the serving engine executes for ``desc``.
 
     Concurrent requests are the tasks (Independent by default); a shared
     prompt prefix is a region every task reads; with ``prefix_staged`` (the
-    prefix registry maps it once) it leaves the per-task read sets.  A
-    single request decomposes into its prefill-chunk RAW chain instead.
-    ``kernel_iterations`` is the decode-steps-per-prefill-task ratio: when
-    decode re-runs many times on resident KV per prefill task, the workload
-    is the paper's Iterative pattern.
+    prefix registry maps it once, or — mamba — a state snapshot stands in)
+    it leaves the per-task read sets.  A single request decomposes into its
+    prefill-chunk RAW chain instead.  ``kernel_iterations`` is the
+    decode-steps-per-prefill-task ratio: when decode re-runs many times on
+    resident state per prefill task, the workload is the paper's Iterative
+    pattern.
 
     With ``spec_decode`` a decode-dominated workload stops being modeled as
     kernel re-runs on resident data: the engine executes verify *chunks* of
     ``spec_k + 1`` positions, each reading the KV the previous chunk wrote
     — a RAW chain of multi-token tasks, graphed exactly like the chunked
     prefill chain (and therefore TRUE_DEPENDENT / streamable).
+
+    ``arch`` selects the per-architecture graph (model_iface taxonomy):
+
+      * ``"transformer"`` / ``"prefix_lm"`` — the RAW carrier between
+        prefill chunks is the KV cache;
+      * ``"mamba"`` — the carrier is the O(1) recurrent state (the same
+        TRUE_DEPENDENT chain, different region); speculation never
+        applies (the engine rejects it — state is irreversible);
+      * ``"whisper"`` — an ``encode`` task precedes the chain: a one-shot
+        request is one sequential encode→decode stage (SYNC, the paper's
+        staged transfer), a chunked one streams the decoder chain after
+        the encode head, and decode-dominated batches are ITERATIVE.
     """
     if prefill_chunk < 1:
         raise ValueError(f"prefill_chunk must be >= 1, got {prefill_chunk}")
+    if arch not in ("transformer", "mamba", "whisper", "prefix_lm"):
+        raise ValueError(
+            f"unknown arch {arch!r}; expected transformer | mamba | "
+            "whisper | prefix_lm")
     n_chunks = -(-desc.prompt_len_mean // prefill_chunk)
     iters = max(1, round(desc.max_new_tokens / n_chunks))
-    if (spec_decode and spec_k >= 1
+    if (spec_decode and spec_k >= 1 and arch == "transformer"
             and iters >= dep.Workload.ITERATIVE_THRESHOLD):
         # Speculation turned the per-token chain into a chunked decode
         # stream: verify step t reads the pages step t-1 wrote (the same
@@ -208,18 +226,34 @@ def to_task_graph(
                 writes=[f"kv[v{t}]"]))
         return dep.Workload("serve-spec-decode", tasks)
     if desc.n_requests == 1:
+        head = []
+        reads0 = ["prompt[0]"]
+        if arch == "whisper":
+            # The SYNC stage: the full encoder output must exist before
+            # the decoder reads anything through cross-attention.
+            head = [dep.Task.make("encode", reads=["audio[0]"],
+                                  writes=["enc[0]"])]
+            reads0.append("enc[0]")
         if n_chunks <= 1:
-            tasks = [dep.Task.make("req0", reads=["prompt[0]"],
-                                   writes=["out[0]"])]
-            return dep.Workload("serve-single", tasks)
-        # Chunked prefill: chunk t reads the KV that chunk t-1 wrote (the
-        # RAW handoff of §4.2) — NW-style True dependence, streamable.
-        tasks = [dep.Task.make("chunk0", reads=["prompt[0]"],
-                               writes=["kv[0]"])]
+            tasks = head + [dep.Task.make("req0", reads=reads0,
+                                          writes=["out[0]"])]
+            return dep.Workload(
+                "serve-single", tasks,
+                sequential_kernel=arch == "whisper")
+        # Chunked prefill: chunk t reads the carrier that chunk t-1 wrote
+        # (the RAW handoff of §4.2) — NW-style True dependence,
+        # streamable.  The carrier is the KV cache for attention archs and
+        # the O(1) recurrent state for SSMs; whisper's chunks additionally
+        # read the staged encoder output.
+        carrier = "state" if arch == "mamba" else "kv"
+        tasks = head + [dep.Task.make("chunk0", reads=reads0,
+                                      writes=[f"{carrier}[0]"])]
         for t in range(1, min(n_chunks, _MAX_MODEL_TASKS)):
+            reads = [f"prompt[{t}]", f"{carrier}[{t - 1}]"]
+            if arch == "whisper":
+                reads.append("enc[0]")
             tasks.append(dep.Task.make(
-                f"chunk{t}", reads=[f"prompt[{t}]", f"kv[{t - 1}]"],
-                writes=[f"kv[{t}]"]))
+                f"chunk{t}", reads=reads, writes=[f"{carrier}[{t}]"]))
         return dep.Workload("serve-chunked-prefill", tasks)
     shared = desc.shared_prefix_fraction > 0.0 and not prefix_staged
     tasks = []
@@ -235,6 +269,7 @@ def to_task_graph(
 def classify_workload(
     desc: WorkloadDescriptor, *, prefill_chunk: int,
     prefix_staged: bool = False, spec_decode: bool = False, spec_k: int = 0,
+    arch: str = "transformer",
 ) -> dep.Category:
     """Map ``desc`` onto the paper's five categories (§4.1).
 
@@ -250,10 +285,16 @@ def classify_workload(
     verify-chunk RAW chain and classifies TRUE_DEPENDENT — streamable, so
     the chunk/interleave/spec_k search actually runs for the most common
     serving regime (long generations, short prompts).
+
+    ``arch`` maps per-architecture graphs onto the same categories (see
+    ``to_task_graph``): SSM prefill is the TRUE_DEPENDENT RAW chain over
+    recurrent state, whisper's encode is a SYNC stage and its decode the
+    usual ITERATIVE chain — the paper's claim that streaming generalizes
+    per *category*, not per application (§4).
     """
     cat = dep.classify(to_task_graph(
         desc, prefill_chunk=prefill_chunk, prefix_staged=prefix_staged,
-        spec_decode=spec_decode, spec_k=spec_k))
+        spec_decode=spec_decode, spec_k=spec_k, arch=arch))
     if (cat is dep.Category.SYNC and desc.n_requests > 1
             and 0.0 < desc.shared_prefix_fraction < SHARE_DOMINANT):
         return dep.Category.FALSE_DEPENDENT
