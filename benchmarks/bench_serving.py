@@ -27,6 +27,14 @@ measured tokens/s on the same workload — the A/B every future perf PR can
 be judged against.  Acceptance: tuned >= analytic, greedy outputs bitwise
 identical to the untuned paged path.
 
+The quantized-pages section (``run_quant``) re-runs the workload with the
+pool quantized (``ServeConfig.kv_dtype="int8"``) at the *same pool byte
+budget* as the fp32 pool and reports the concurrent-request fit each dtype
+affords, observed peak concurrency, tokens/s, and the greedy-token
+agreement against the fp32 outputs.  Acceptance: quantized fit >= 1.5x the
+fp32 fit in the same budget, strictly higher observed concurrency, and
+mean token agreement within the documented tolerance.
+
 The speculative-decode section (``run_spec``) runs a lookup-friendly
 workload — repetitive prompts and generations long enough for greedy
 decode to settle into its cycle, the regime where the n-gram drafter's
@@ -151,6 +159,90 @@ def run_sharing(
         f"serving_prefix_tokens_per_s,"
         f"{n_requests * new_tokens / on['dt']:.1f},"
         f"vs {n_requests * new_tokens / off['dt']:.1f} unshared",
+    ]
+
+
+#: Mean greedy-token agreement the quantized A/B must keep against the
+#: fp32 outputs (the documented divergence tolerance: greedy divergence
+#: cascades after one flipped argmax, so the bound is on the mean, and it
+#: matches the tuner's quantized parity guard).
+QUANT_AGREEMENT_MIN = 0.5
+
+
+def run_quant(
+    cfg=None, params=None, *, n_requests: int = 6, prompt_len: int = 64,
+    new_tokens: int = 16, max_batch: int = 4, block_size: int = 16,
+    prefill_chunk: int = 32, kv_dtype: str = "int8",
+) -> list[str]:
+    """Quantized-vs-fp32 pool capacity A/B at one pool byte budget.
+
+    The budget is sized so the fp32 pool fits exactly two concurrent
+    requests; the quantized pool converts the same bytes into ~4x the
+    pages (int8 codes + per-page scales vs f32 rows), so its fit — and its
+    observed peak concurrency on the identical workload — must be
+    strictly higher.  Greedy outputs are checked against the fp32 run's
+    within ``QUANT_AGREEMENT_MIN`` (quantized parity is tolerance-based,
+    never bitwise)."""
+    from repro.kernels import quant
+    if cfg is None:
+        cfg = C.get_smoke_config(ARCH)
+        params = T.init_params(cfg, jax.random.PRNGKey(0))
+    prompts = _prompts(cfg, n_requests, prompt_len)
+    max_seq = -(-(prompt_len + new_tokens) // block_size) * block_size
+    pages_per_req = -(-(prompt_len + new_tokens) // block_size)
+    fp32_pb = quant.page_bytes_est(
+        block_size, cfg.n_kv_heads, cfg.head_dim, "fp32")
+    quant_pb = quant.page_bytes_est(
+        block_size, cfg.n_kv_heads, cfg.head_dim, kv_dtype)
+    # The budget every pool must live inside: exactly two fp32 requests.
+    budget_bytes = 2 * pages_per_req * fp32_pb
+
+    results = {}
+    for kd in ("fp32", kv_dtype):
+        pb = fp32_pb if kd == "fp32" else quant_pb
+        capacity = budget_bytes // pb  # pages this dtype affords
+        fit = int(capacity // pages_per_req)
+        scfg = ServeConfig(
+            max_seq=max_seq, prefill_chunk=prefill_chunk,
+            max_new_tokens=new_tokens, paged=True, block_size=block_size,
+            max_batch=min(fit, max_batch), num_blocks=int(capacity) + 1,
+            kv_dtype=kd)
+        eng = StreamedBatchEngine(cfg, params, scfg)
+        eng.submit(prompts[0])
+        eng.run()  # warm the compiles out of the timed run
+        eng.peak_active = 0
+        t0 = time.perf_counter()
+        uids = [eng.submit(p) for p in prompts]
+        out = eng.run()
+        dt = time.perf_counter() - t0
+        results[kd] = dict(
+            out=[out[u] for u in uids], dt=dt, fit=fit,
+            peak=eng.peak_active, page_bytes=eng.kv.page_bytes)
+    fp, qz = results["fp32"], results[kv_dtype]
+    agree = float(np.mean([np.mean(a == b)
+                           for a, b in zip(fp["out"], qz["out"])]))
+    assert qz["fit"] >= 1.5 * fp["fit"], (
+        f"quantized pages must fit >= 1.5x the concurrent requests of fp32 "
+        f"in the same byte budget ({qz['fit']} vs {fp['fit']})")
+    assert qz["peak"] > fp["peak"], (
+        "the quantized pool must observably admit more concurrent requests "
+        f"({qz['peak']} vs {fp['peak']})")
+    assert agree >= QUANT_AGREEMENT_MIN, (
+        f"quantized greedy outputs diverged past the documented tolerance "
+        f"({agree:.2f} < {QUANT_AGREEMENT_MIN})")
+    total = n_requests * new_tokens
+    return [
+        f"serving_quant_fit,{qz['fit']},concurrent requests in the fp32 "
+        f"pool byte budget ({kv_dtype}: {qz['page_bytes']}B/page, "
+        f"peak {qz['peak']} active)",
+        f"serving_quant_fit_fp32,{fp['fit']},same budget at fp32 "
+        f"({fp['page_bytes']}B/page, peak {fp['peak']} active)",
+        f"serving_quant_capacity_ratio,{qz['fit'] / fp['fit']:.2f},"
+        f"x concurrent-slot fit bought by {kv_dtype} pages",
+        f"serving_quant_tokens_per_s,{total / qz['dt']:.1f},"
+        f"vs {total / fp['dt']:.1f} fp32 (same byte budget)",
+        f"serving_quant_agreement,{agree:.3f},mean greedy-token agreement "
+        f"vs fp32 (tolerance {QUANT_AGREEMENT_MIN})",
     ]
 
 
@@ -352,7 +444,8 @@ def run() -> list[str]:
     # jitter on a loaded host; the CSV line reports the ratio either way
     # (the deterministic fewer-decode-steps assert still holds), and a
     # direct run_spec() keeps the strict tokens/s acceptance bar.
-    sharing_lines = (run_sharing(cfg, params) + run_tuned(cfg, params)
+    sharing_lines = (run_sharing(cfg, params) + run_quant(cfg, params)
+                     + run_tuned(cfg, params)
                      + run_spec(cfg, params, strict=False))
     return [
         f"serving_seq_tokens_per_s,{seq_tps:.1f},"

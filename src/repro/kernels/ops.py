@@ -117,6 +117,60 @@ def paged_attention_multi(
         softcap=softcap, scale=scale, interpret=interpret)
 
 
+@functools.partial(
+    jax.jit, static_argnames=("window", "softcap", "scale", "interpret"))
+def paged_attention_quant(
+    q,  # (B, H, hd) single-token queries
+    k_pool,  # (num_blocks, block_size, Hkv, hd) int8 / fp8 codes
+    v_pool,
+    k_scale,  # (num_blocks, Hkv) f32 per-page, per-kv-head scales
+    v_scale,
+    page_table,  # (B, n_pages) int32
+    cur_len,  # (B,) int32
+    *,
+    window=0,
+    softcap=0.0,
+    scale=None,
+    interpret=None,
+):
+    """Quantized-pool decode attention with dequantization fused into the
+    block compute: the DMA moves narrow codes, the scale rides the same
+    scalar-prefetched page index, and full-precision K/V never exists in
+    pool-resident form."""
+    interpret = _default_interpret() if interpret is None else interpret
+    scale = scale if scale is not None else 1.0 / math.sqrt(q.shape[-1])
+    return _pa.paged_attention_kernel(
+        q, k_pool, v_pool, page_table, cur_len, window=window,
+        softcap=softcap, scale=scale, interpret=interpret,
+        k_scale=k_scale, v_scale=v_scale)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("window", "softcap", "scale", "interpret"))
+def paged_attention_multi_quant(
+    q,  # (B, T, H, hd): T-token draft block per slot
+    k_pool,  # (num_blocks, block_size, Hkv, hd) int8 / fp8 codes
+    v_pool,
+    k_scale,  # (num_blocks, Hkv) f32 per-page, per-kv-head scales
+    v_scale,
+    page_table,  # (B, n_pages) int32
+    cur_len,  # (B,) int32: absolute position of token 0 per slot
+    *,
+    window=0,
+    softcap=0.0,
+    scale=None,
+    interpret=None,
+):
+    """Quantized q_len>1 paged decode (speculative verify) with fused
+    dequantization — the quant twin of ``paged_attention_multi``."""
+    interpret = _default_interpret() if interpret is None else interpret
+    scale = scale if scale is not None else 1.0 / math.sqrt(q.shape[-1])
+    return _pa.paged_attention_multi_kernel(
+        q, k_pool, v_pool, page_table, cur_len, window=window,
+        softcap=softcap, scale=scale, interpret=interpret,
+        k_scale=k_scale, v_scale=v_scale)
+
+
 @functools.partial(jax.jit, static_argnames=("block", "row_tile", "interpret"))
 def fwt(x, *, block=None, row_tile=256, interpret=None):
     """Walsh-Hadamard transform of a flat (n,) or batched (r, n) input.

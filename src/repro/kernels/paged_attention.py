@@ -43,11 +43,10 @@ def _paged_kernel(
     q_ref,  # (1, 1, q_len * g, hd)
     k_ref,  # (1, bs, 1, hd): one physical page of this kv head
     v_ref,  # (1, bs, 1, hd)
-    o_ref,  # (1, 1, q_len * g, hd)
-    m_ref,  # VMEM (q_len * g,)
-    l_ref,  # VMEM (q_len * g,)
-    acc_ref,  # VMEM (q_len * g, hd)
-    *,
+    *rest,  # quantized: (ks_ref, vs_ref, o_ref, m, l, acc) — the per-page
+    # per-head f32 scales ride the same scalar-prefetched indexing as the
+    # page itself, so dequantization is fused into the block compute (the
+    # pool's narrow codes are what the DMA moves); else (o_ref, m, l, acc)
     n_pages: int,
     block_size: int,
     q_len: int,
@@ -55,7 +54,13 @@ def _paged_kernel(
     window: int,
     softcap: float,
     scale: float,
+    quantized: bool = False,
 ):
+    if quantized:
+        ks_ref, vs_ref, o_ref, m_ref, l_ref, acc_ref = rest
+    else:
+        ks_ref = vs_ref = None
+        o_ref, m_ref, l_ref, acc_ref = rest
     b = pl.program_id(0)
     j = pl.program_id(2)
 
@@ -77,6 +82,10 @@ def _paged_kernel(
     def _compute():
         q = q_ref[0, 0]  # (q_len * g, hd)
         k = k_ref[0, :, 0, :]  # (bs, hd)
+        v = v_ref[0, :, 0, :]  # (bs, hd)
+        if quantized:
+            k = k.astype(jnp.float32) * ks_ref[0, 0]
+            v = v.astype(jnp.float32) * vs_ref[0, 0]
         s = jax.lax.dot_general(
             q, k, (((1,), (1,)), ((), ())),
             preferred_element_type=jnp.float32) * scale
@@ -100,7 +109,7 @@ def _paged_kernel(
         alpha = jnp.exp(m_old - m_new)
         l_ref[...] = alpha * l_ref[...] + p.sum(axis=1)
         pv = jax.lax.dot_general(
-            p.astype(v_ref.dtype), v_ref[0, :, 0, :], (((1,), (0,)), ((), ())),
+            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
             preferred_element_type=jnp.float32)
         acc_ref[...] = alpha[:, None] * acc_ref[...] + pv
         m_ref[...] = m_new
@@ -125,25 +134,43 @@ def _paged_call(
     softcap: float,
     scale: float,
     interpret: bool,
+    k_scale: jax.Array | None = None,  # (num_blocks, Hkv) f32 per-page
+    v_scale: jax.Array | None = None,  # per-head scales (quantized pools)
 ) -> jax.Array:
     b, hkv, rows, hd = qr.shape
     nb, bs, _, _ = k_pool.shape
     n_pages = page_table.shape[1]
+    quantized = k_scale is not None
     kern = functools.partial(
         _paged_kernel, n_pages=n_pages, block_size=bs, q_len=q_len,
-        group=group, window=window, softcap=softcap, scale=scale)
+        group=group, window=window, softcap=softcap, scale=scale,
+        quantized=quantized)
+
+    in_specs = [
+        pl.BlockSpec((1, 1, rows, hd),
+                     lambda bb, hh, jj, pt, cl: (bb, hh, 0, 0)),
+        pl.BlockSpec((1, bs, 1, hd),
+                     lambda bb, hh, jj, pt, cl: (pt[bb, jj], 0, hh, 0)),
+        pl.BlockSpec((1, bs, 1, hd),
+                     lambda bb, hh, jj, pt, cl: (pt[bb, jj], 0, hh, 0)),
+    ]
+    inputs = [page_table.astype(jnp.int32), cur_len.astype(jnp.int32), qr,
+              k_pool, v_pool]
+    if quantized:
+        # The scale rides the page's scalar-prefetched index: one (1, 1)
+        # block of the (num_blocks, Hkv) scale pool per grid step.
+        in_specs += [
+            pl.BlockSpec((1, 1),
+                         lambda bb, hh, jj, pt, cl: (pt[bb, jj], hh)),
+            pl.BlockSpec((1, 1),
+                         lambda bb, hh, jj, pt, cl: (pt[bb, jj], hh)),
+        ]
+        inputs += [k_scale, v_scale]
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=(b, hkv, n_pages),
-        in_specs=[
-            pl.BlockSpec((1, 1, rows, hd),
-                         lambda bb, hh, jj, pt, cl: (bb, hh, 0, 0)),
-            pl.BlockSpec((1, bs, 1, hd),
-                         lambda bb, hh, jj, pt, cl: (pt[bb, jj], 0, hh, 0)),
-            pl.BlockSpec((1, bs, 1, hd),
-                         lambda bb, hh, jj, pt, cl: (pt[bb, jj], 0, hh, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec(
             (1, 1, rows, hd), lambda bb, hh, jj, pt, cl: (bb, hh, 0, 0)),
         scratch_shapes=[
@@ -161,8 +188,7 @@ def _paged_call(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,
-    )(page_table.astype(jnp.int32), cur_len.astype(jnp.int32), qr,
-      k_pool, v_pool)
+    )(*inputs)
 
 
 def paged_attention_kernel(
@@ -176,6 +202,8 @@ def paged_attention_kernel(
     softcap: float = 0.0,
     scale: float,
     interpret: bool = False,
+    k_scale: jax.Array | None = None,  # (num_blocks, Hkv) f32: quantized
+    v_scale: jax.Array | None = None,  # pool scales (dequant fused in)
 ) -> jax.Array:
     b, h, hd = q.shape
     nb, bs, hkv, _ = k_pool.shape
@@ -185,7 +213,8 @@ def paged_attention_kernel(
     qr = q.reshape(b, hkv, g, hd)
     out = _paged_call(
         qr, k_pool, v_pool, page_table, cur_len, q_len=1, group=g,
-        window=window, softcap=softcap, scale=scale, interpret=interpret)
+        window=window, softcap=softcap, scale=scale, interpret=interpret,
+        k_scale=k_scale, v_scale=v_scale)
     return out.reshape(b, h, hd)
 
 
@@ -200,6 +229,8 @@ def paged_attention_multi_kernel(
     softcap: float = 0.0,
     scale: float,
     interpret: bool = False,
+    k_scale: jax.Array | None = None,  # (num_blocks, Hkv) f32: quantized
+    v_scale: jax.Array | None = None,  # pool scales (dequant fused in)
 ) -> jax.Array:
     """q_len>1 decode from the pool: query t of slot b sits at absolute
     position ``cur_len[b] + t`` (speculative verify: one pending token plus
@@ -214,6 +245,7 @@ def paged_attention_multi_kernel(
         b, hkv, t * g, hd)
     out = _paged_call(
         qr, k_pool, v_pool, page_table, cur_len, q_len=t, group=g,
-        window=window, softcap=softcap, scale=scale, interpret=interpret)
+        window=window, softcap=softcap, scale=scale, interpret=interpret,
+        k_scale=k_scale, v_scale=v_scale)
     return out.reshape(b, hkv, t, g, hd).transpose(0, 2, 1, 3, 4).reshape(
         b, t, h, hd)

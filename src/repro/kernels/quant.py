@@ -1,0 +1,114 @@
+"""Quantized KV-page helpers: per-page, per-kv-head scale quantization.
+
+The paged KV pool is the engine's dominant byte stream (every decode tick
+gathers pages, every prefill chunk scatters them, evict/readmit round-trips
+them).  Following the paper's transfer-bound analysis, shrinking the pages
+themselves is the biggest remaining lever: this module implements the
+quantization scheme shared by the pool scatter (``runtime/kv_cache.py``),
+the in-place decode/prefill writes (``models/attention.py``) and the
+fused-dequant attention kernels (``kernels/paged_attention.py``).
+
+Scheme
+------
+A pool leaf keeps shape ``(r, num_blocks, block_size, n_kv_heads,
+head_dim)`` but stores a narrow dtype; a parallel f32 scale leaf of shape
+``(r, num_blocks, n_kv_heads)`` holds one scale per (layer, page, kv-head):
+
+    scale = absmax(page rows over (block_size, head_dim)) / QMAX
+    q     = round(x / scale)        (int8;  QMAX = 127)
+    q     = cast(x / scale)         (fp8;   QMAX = 448, e4m3 emulated)
+    x~    = q * scale
+
+Per-head scales keep one outlier head from crushing the resolution of the
+rest of the page; per-page granularity means COW forks and evict/readmit
+move the scale with the block as one more pool leaf.
+
+int8 reconstruction error is bounded by ``scale / 2`` per element
+(round-to-nearest on a [-127, 127] grid).  fp8 (e4m3: 3 mantissa bits)
+has a relative bound instead: ``|x~ - x| <= |x| * 2**-3 + scale``.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+#: Accepted ``kv_dtype`` values, "fp32" meaning the unquantized pool.
+KV_DTYPES = ("fp32", "int8", "fp8")
+
+#: kv_dtype -> (storage dtype, QMAX).  fp8 uses e4m3 (max normal 448);
+#: on CPU it is emulated by ml_dtypes, which is exactly the behaviour we
+#: want to validate before a real-accelerator run.
+_QUANT = {
+    "int8": (jnp.int8, 127.0),
+    "fp8": (jnp.float8_e4m3fn, 448.0),
+}
+
+#: Keys a quantized cache dict carries alongside "k"/"v".
+SCALE_KEYS = ("k_scale", "v_scale")
+
+
+def validate_kv_dtype(kv_dtype: str) -> str:
+    if kv_dtype not in KV_DTYPES:
+        raise ValueError(
+            f"kv_dtype must be one of {KV_DTYPES}, got {kv_dtype!r}")
+    return kv_dtype
+
+
+def is_quantized(kv_dtype: str) -> bool:
+    return validate_kv_dtype(kv_dtype) != "fp32"
+
+
+def storage_dtype(kv_dtype: str):
+    """The pool leaf dtype for a quantized mode."""
+    return _QUANT[kv_dtype][0]
+
+
+def qmax(kv_dtype: str) -> float:
+    return _QUANT[kv_dtype][1]
+
+
+def scales_of(rows: jnp.ndarray, kv_dtype: str) -> jnp.ndarray:
+    """Per-kv-head scales for full-precision rows.
+
+    ``rows`` is ``(..., block_size, n_kv_heads, head_dim)``; the result is
+    ``(..., n_kv_heads)`` f32: absmax over (block_size, head_dim) / QMAX.
+    All-zero pages get scale 0 (quantize maps them to all-zero codes).
+    """
+    absmax = jnp.max(jnp.abs(rows.astype(jnp.float32)), axis=(-3, -1))
+    return absmax / qmax(kv_dtype)
+
+
+def quantize(rows: jnp.ndarray, scale: jnp.ndarray,
+             kv_dtype: str) -> jnp.ndarray:
+    """Quantize ``(..., bs, hkv, hd)`` rows with ``(..., hkv)`` scales."""
+    dt, q = _QUANT[kv_dtype]
+    inv = jnp.where(scale > 0.0, 1.0 / jnp.maximum(scale, 1e-30), 0.0)
+    x = rows.astype(jnp.float32) * inv[..., None, :, None]
+    if dt == jnp.int8:
+        return jnp.clip(jnp.round(x), -q, q).astype(dt)
+    return jnp.clip(x, -q, q).astype(dt)
+
+
+def dequantize(codes: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    """Inverse of :func:`quantize`: ``(..., bs, hkv, hd)`` codes back to
+    f32 using ``(..., hkv)`` scales."""
+    return codes.astype(jnp.float32) * scale[..., None, :, None]
+
+
+def page_bytes_est(block_size: int, n_kv_heads: int, head_dim: int,
+                   kv_dtype: str, *, compute_itemsize: int = 4) -> int:
+    """Per-layer bytes one K+V page costs, scale leaves included.
+
+    Analytic twin of ``PagedKVCache.page_bytes`` (which measures the live
+    pools) for callers that must size a pool *before* building it — the
+    tuner's byte-budget-equalized ``num_blocks`` and the bench's capacity
+    A/B both use it.
+    """
+    validate_kv_dtype(kv_dtype)
+    if kv_dtype == "fp32":
+        item = compute_itemsize
+        scale_bytes = 0
+    else:
+        item = jnp.dtype(storage_dtype(kv_dtype)).itemsize
+        scale_bytes = 2 * n_kv_heads * 4  # k_scale + v_scale rows, f32
+    return 2 * block_size * n_kv_heads * head_dim * item + scale_bytes

@@ -124,6 +124,33 @@ def paged_attention_multi_ref(
     return out.astype(q.dtype)
 
 
+def _dequant_pool(pool: jax.Array, scale: jax.Array) -> jax.Array:
+    """(num_blocks, bs, hkv, hd) codes x (num_blocks, hkv) scales -> f32."""
+    return pool.astype(jnp.float32) * scale[:, None, :, None]
+
+
+def paged_attention_quant_ref(
+    q, k_pool, v_pool, k_scale, v_scale, page_table, cur_len, *,
+    window: int = 0, softcap: float = 0.0, scale: float,
+) -> jax.Array:
+    """Oracle for the fused-dequant paged kernel: dequantize the whole pool
+    up front (exactly codes * scale, the value the kernel reconstructs
+    per block), then the existing paged oracle."""
+    return paged_attention_ref(
+        q, _dequant_pool(k_pool, k_scale), _dequant_pool(v_pool, v_scale),
+        page_table, cur_len, window=window, softcap=softcap, scale=scale)
+
+
+def paged_attention_multi_quant_ref(
+    q, k_pool, v_pool, k_scale, v_scale, page_table, cur_len, *,
+    window: int = 0, softcap: float = 0.0, scale: float,
+) -> jax.Array:
+    """q_len>1 twin of :func:`paged_attention_quant_ref`."""
+    return paged_attention_multi_ref(
+        q, _dequant_pool(k_pool, k_scale), _dequant_pool(v_pool, v_scale),
+        page_table, cur_len, window=window, softcap=softcap, scale=scale)
+
+
 def fwt_ref(x: jax.Array) -> jax.Array:
     """Unnormalized Walsh-Hadamard transform over the last axis."""
     n = x.shape[-1]

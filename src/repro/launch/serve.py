@@ -57,6 +57,13 @@ def main() -> None:
                     help="cache rows per KV page (paged mode)")
     ap.add_argument("--num-blocks", type=int, default=None,
                     help="page-pool size; default = contiguous-parity")
+    ap.add_argument("--kv-dtype", choices=("fp32", "int8", "fp8"),
+                    default="fp32",
+                    help="paged-pool storage dtype: int8/fp8 store quantized "
+                         "pages with per-page per-kv-head scales (~4x the "
+                         "concurrent requests per pool byte; greedy outputs "
+                         "may diverge within the documented tolerance; "
+                         "needs --paged)")
     ap.add_argument("--prefix-sharing", action="store_true",
                     help="map common page-aligned prompt prefixes to the "
                          "same physical pages (copy-on-write; needs --paged)")
@@ -84,6 +91,8 @@ def main() -> None:
     args = ap.parse_args()
     if args.prefix_sharing and not args.paged:
         ap.error("--prefix-sharing requires --paged")
+    if args.kv_dtype != "fp32" and not args.paged:
+        ap.error("--kv-dtype quantizes the paged pool; it requires --paged")
 
     cfg = configs.get_smoke_config(args.arch)
     params = T.init_params(cfg, jax.random.PRNGKey(0))
@@ -100,6 +109,7 @@ def main() -> None:
         paged=args.paged,
         block_size=args.block_size,
         num_blocks=args.num_blocks,
+        kv_dtype=args.kv_dtype,
         paged_kernel={"auto": None, "on": True, "off": False}[
             args.paged_kernel],
         prefix_sharing=args.prefix_sharing,
@@ -187,6 +197,8 @@ def main() -> None:
             mode += (f", paged block={eng.kv.block_size} "
                      f"(peak {st.peak_in_use}/{st.capacity} pages, "
                      f"{st.page_bytes}B/page)")
+            if args.kv_dtype != "fp32":
+                mode += f", kv-dtype {eng.kv.kv_dtype}"
             if args.prefix_sharing:
                 mode += (f", prefix-sharing {eng.prefix_hits} hits / "
                          f"{eng.prefix_pages_shared} pages mapped "

@@ -27,6 +27,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels import quant
 from repro.models import layers
 
 Params = dict[str, Any]
@@ -364,6 +365,8 @@ def paged_decode_attention(
     window: int = 0,
     softcap_val: float = 0.0,
     scale: float | None = None,
+    k_scale: jax.Array | None = None,  # (num_blocks, Hkv) per-page scales
+    v_scale: jax.Array | None = None,
 ) -> jax.Array:
     """Decode attention against the paged KV pool (gather reference).
 
@@ -374,14 +377,68 @@ def paged_decode_attention(
     stale pages (mapped to the trash block) never contribute.  The Pallas
     kernel twin (``repro.kernels.paged_attention``) streams the same pages
     block-wise without materializing the gathered view in HBM.
+
+    With ``k_scale``/``v_scale`` the pools hold quantized codes and the
+    gather dequantizes per (page, kv-head) before attending.
     """
     b, n_pages = page_table.shape
     nb, bs, hkv, hd = k_pool.shape
-    k = k_pool[page_table].reshape(b, n_pages * bs, hkv, hd)
-    v = v_pool[page_table].reshape(b, n_pages * bs, hkv, hd)
+    k = k_pool[page_table]  # (B, n_pages, bs, hkv, hd)
+    v = v_pool[page_table]
+    if k_scale is not None:
+        k = quant.dequantize(k, k_scale[page_table])
+        v = quant.dequantize(v, v_scale[page_table])
+        k = k.astype(q.dtype)
+        v = v.astype(q.dtype)
+    k = k.reshape(b, n_pages * bs, hkv, hd)
+    v = v.reshape(b, n_pages * bs, hkv, hd)
     return decode_attention(
         q, k, v, cur_len=cur_len, window=window, softcap_val=softcap_val,
         scale=scale)
+
+
+def _kv_dtype_of(cache: dict[str, jax.Array]) -> str:
+    return "int8" if cache["k"].dtype == jnp.int8 else "fp8"
+
+
+def _quant_paged_write(
+    pool: jax.Array,  # (num_blocks, bs, hkv, hd) quantized codes
+    scale_pool: jax.Array,  # (num_blocks, hkv) f32 per-page scales
+    rows: jax.Array,  # (B, S, hkv, hd) new full-precision rows
+    page: jax.Array,  # (B, S) physical block per row-position
+    off: jax.Array,  # (B, S) in-page offset per row-position
+    kv_dtype: str,
+) -> tuple[jax.Array, jax.Array]:
+    """Decode-write into quantized pages with rescale-on-grow.
+
+    Each written row may exceed its page's current scale, so the page's
+    scale grows to cover it (max of old and the row's absmax/QMAX) and the
+    existing codes are requantized at the new scale — an exact identity
+    when the scale does not change (ratio 1 round-trips both int8 and
+    fp8).  A freshly-faulted page (offset 0) carries a stale scale from
+    its previous owner, which must be ignored or resolution collapses.
+
+    Positions are processed sequentially (S is 1 for plain decode, the
+    draft length for speculative decode) so two draft rows landing on the
+    same page compose.  Duplicate pages across batch rows only occur at
+    the trash block 0, where any finite garbage is acceptable.
+    """
+    b, s = page.shape
+    bidx = jnp.arange(b)
+    for t in range(s):
+        pg = page[:, t]  # (B,)
+        ot = off[:, t]  # (B,)
+        row = rows[:, t].astype(jnp.float32)  # (B, hkv, hd)
+        old_s = scale_pool[pg]  # (B, hkv)
+        old_eff = jnp.where(ot[:, None] == 0, 0.0, old_s)
+        row_s = jnp.max(jnp.abs(row), axis=-1) / quant.qmax(kv_dtype)
+        new_s = jnp.maximum(old_eff, row_s)
+        base = quant.dequantize(pool[pg], old_eff)  # (B, bs, hkv, hd)
+        merged = base.at[bidx, ot].set(row)
+        codes = quant.quantize(merged, new_s, kv_dtype)
+        pool = pool.at[pg].set(codes)
+        scale_pool = scale_pool.at[pg].set(new_s)
+    return pool, scale_pool
 
 
 # ----------------------------------------------------------------------------
@@ -481,23 +538,48 @@ def attention_apply(
                                 axis=1),
             0)  # (B, S) physical block ids (0 = trash)
         off = pos % bs_pg
-        k_pool = cache["k"].at[page, off].set(k.astype(cache["k"].dtype))
-        v_pool = cache["v"].at[page, off].set(v.astype(cache["v"].dtype))
-        new_cache = {"k": k_pool, "v": v_pool}
+        quantized = "k_scale" in cache
+        if quantized:
+            kv_dtype = _kv_dtype_of(cache)
+            k_pool, ks_pool = _quant_paged_write(
+                cache["k"], cache["k_scale"], k, page, off, kv_dtype)
+            v_pool, vs_pool = _quant_paged_write(
+                cache["v"], cache["v_scale"], v, page, off, kv_dtype)
+            new_cache = {"k": k_pool, "v": v_pool,
+                         "k_scale": ks_pool, "v_scale": vs_pool}
+        else:
+            k_pool = cache["k"].at[page, off].set(k.astype(cache["k"].dtype))
+            v_pool = cache["v"].at[page, off].set(v.astype(cache["v"].dtype))
+            ks_pool = vs_pool = None
+            new_cache = {"k": k_pool, "v": v_pool}
         if paged_kernel:
             from repro.kernels import ops as _kops
             if s == 1:
-                out = _kops.paged_attention(
-                    q[:, 0], k_pool, v_pool, page_table, cur_len,
-                    window=window, softcap=softcap_val, scale=scale)[:, None]
+                if quantized:
+                    out = _kops.paged_attention_quant(
+                        q[:, 0], k_pool, v_pool, ks_pool, vs_pool,
+                        page_table, cur_len, window=window,
+                        softcap=softcap_val, scale=scale)[:, None]
+                else:
+                    out = _kops.paged_attention(
+                        q[:, 0], k_pool, v_pool, page_table, cur_len,
+                        window=window, softcap=softcap_val,
+                        scale=scale)[:, None]
             else:
-                out = _kops.paged_attention_multi(
-                    q, k_pool, v_pool, page_table, cur_len,
-                    window=window, softcap=softcap_val, scale=scale)
+                if quantized:
+                    out = _kops.paged_attention_multi_quant(
+                        q, k_pool, v_pool, ks_pool, vs_pool, page_table,
+                        cur_len, window=window, softcap=softcap_val,
+                        scale=scale)
+                else:
+                    out = _kops.paged_attention_multi(
+                        q, k_pool, v_pool, page_table, cur_len,
+                        window=window, softcap=softcap_val, scale=scale)
         else:
             out = paged_decode_attention(
                 q, k_pool, v_pool, page_table, cur_len=cur_len, window=window,
-                softcap_val=softcap_val, scale=scale)
+                softcap_val=softcap_val, scale=scale,
+                k_scale=ks_pool, v_scale=vs_pool)
     elif cur_len is not None and cache is not None and kv_source is None:
         # Decode: write this step's K/V into the cache (ring-buffered if SWA).
         s_cache = cache["k"].shape[1]
@@ -522,6 +604,79 @@ def attention_apply(
         out = decode_attention(
             q, k_cache, v_cache, cur_len=cur_len, window=window,
             softcap_val=softcap_val, scale=scale,
+        )
+    elif page_table is not None and cache is not None and kv_source is None:
+        # Fused prefill -> page scatter (cur_len is None): write this
+        # chunk's K/V projections directly into pool pages through the page
+        # table, then attend with the same streamed flash reference over
+        # the pool context gathered through the table — no contiguous cache
+        # slab, no second jitted scatter.  The chunk's write offsets are
+        # static (q_offset..q_offset+s-1), so the touched logical pages
+        # form a static set and the per-page writes unroll page-at-a-time.
+        #
+        # Bitwise parity with the legacy scatter-after-attention path at
+        # fp32: the gathered context is statically sliced to exactly
+        # q_offset + s positions so ``flash_attention_ref`` sees identical
+        # shapes (hence an identical block decomposition via
+        # ``_pick_chunk``) and identical values — same h, same K/V bits.
+        nb, bs_pg = cache["k"].shape[0], cache["k"].shape[1]
+        n_pages = page_table.shape[1]
+        ctx_len = q_offset + s
+        assert n_pages * bs_pg >= ctx_len, "fused prefill needs pages for the full context"
+        pos_np = q_offset + np.arange(s)
+        idx_np = np.minimum(pos_np // bs_pg, n_pages - 1)
+        quantized = "k_scale" in cache
+        if quantized:
+            kv_dtype = _kv_dtype_of(cache)
+            k_pool, v_pool = cache["k"], cache["v"]
+            ks_pool, vs_pool = cache["k_scale"], cache["v_scale"]
+            for li in range(int(idx_np[0]), int(idx_np[-1]) + 1):
+                lo_t = max(0, li * bs_pg - q_offset)
+                hi_t = min(s, (li + 1) * bs_pg - q_offset)
+                off_lo = (q_offset + lo_t) % bs_pg
+                pg = page_table[:, li]  # (B,)
+                updates = []
+                for pool, scale_pool, rows in (
+                        (k_pool, ks_pool, k), (v_pool, vs_pool, v)):
+                    rows = rows[:, lo_t:hi_t].astype(jnp.float32)
+                    old_s = scale_pool[pg]  # (B, hkv)
+                    # A page starting at offset 0 is fresh: prefill is
+                    # append-only from a page-aligned pos0, so a stale
+                    # scale from the page's previous owner is ignored.
+                    # off_lo > 0 only happens for the chunk's first page,
+                    # partially filled by the previous chunk: merge via
+                    # rescale-on-grow exactly as the decode write does.
+                    old_eff = (jnp.zeros_like(old_s) if off_lo == 0
+                               else old_s)
+                    new_s = jnp.maximum(old_eff, quant.scales_of(
+                        rows, kv_dtype))
+                    base = quant.dequantize(pool[pg], old_eff)
+                    merged = base.at[:, off_lo:off_lo + rows.shape[1]].set(
+                        rows)
+                    codes = quant.quantize(merged, new_s, kv_dtype)
+                    updates.append((pool.at[pg].set(codes),
+                                    scale_pool.at[pg].set(new_s)))
+                (k_pool, ks_pool), (v_pool, vs_pool) = updates
+            new_cache = {"k": k_pool, "v": v_pool,
+                         "k_scale": ks_pool, "v_scale": vs_pool}
+            k_ctx = quant.dequantize(
+                k_pool[page_table], ks_pool[page_table]).astype(q.dtype)
+            v_ctx = quant.dequantize(
+                v_pool[page_table], vs_pool[page_table]).astype(q.dtype)
+        else:
+            page = page_table[:, idx_np]  # (B, S) physical blocks
+            off = pos_np % bs_pg  # (S,) broadcasts against page
+            k_pool = cache["k"].at[page, off].set(k.astype(cache["k"].dtype))
+            v_pool = cache["v"].at[page, off].set(v.astype(cache["v"].dtype))
+            new_cache = {"k": k_pool, "v": v_pool}
+            k_ctx, v_ctx = k_pool[page_table], v_pool[page_table]
+        hkv = k.shape[2]
+        k_ctx = k_ctx.reshape(b, n_pages * bs_pg, hkv, head_dim)[:, :ctx_len]
+        v_ctx = v_ctx.reshape(b, n_pages * bs_pg, hkv, head_dim)[:, :ctx_len]
+        out = flash_attention_ref(
+            q, k_ctx, v_ctx, chunk=chunk, causal=causal, window=window,
+            prefix_len=prefix_len, softcap_val=softcap_val, scale=scale,
+            q_offset=q_offset,
         )
     elif q_offset > 0 and cache is not None and kv_source is None:
         # Streamed (chunked) prefill continuation: write this chunk's K/V at

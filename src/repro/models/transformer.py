@@ -28,6 +28,7 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import quant
 from repro.models import attention as attn_lib
 from repro.models import layers, mamba, meshutil, moe
 
@@ -264,7 +265,8 @@ def init_cache(cfg: ModelConfig, bsz: int, max_seq: int, *, enc_seq: int | None 
 
 
 def init_paged_cache(
-    cfg: ModelConfig, bsz: int, num_blocks: int, block_size: int
+    cfg: ModelConfig, bsz: int, num_blocks: int, block_size: int,
+    kv_dtype: str = "fp32",
 ) -> Params:
     """Paged decode caches: one global page pool per attention unit position.
 
@@ -276,16 +278,26 @@ def init_paged_cache(
     in :func:`init_cache`; so do encoder-decoder cross-attention K/V, which
     are fixed-size (encoder_seq) per slot and prefill-computed — nothing to
     page, everything to evict/readmit as opaque per-slot state.
+
+    ``kv_dtype`` other than "fp32" stores quantized pages (int8/fp8) plus
+    per-page per-kv-head f32 scale leaves ``k_scale``/``v_scale`` of shape
+    (r, num_blocks, n_kv_heads); see ``repro.kernels.quant``.
     """
     r = cfg.n_repeats
     dt = cfg.compute_dtype
+    quantized = quant.is_quantized(kv_dtype)
+    pool_dt = quant.storage_dtype(kv_dtype) if quantized else dt
     cache: Params = {"blocks": {}}
     for i, spec in enumerate(cfg.layer_unit):
         c: Params = {}
         if spec.mixer in ("attn", "attn_local"):
             shape = (r, num_blocks, block_size, cfg.n_kv_heads, cfg.head_dim)
-            c["k"] = jnp.zeros(shape, dt)
-            c["v"] = jnp.zeros(shape, dt)
+            c["k"] = jnp.zeros(shape, pool_dt)
+            c["v"] = jnp.zeros(shape, pool_dt)
+            if quantized:
+                sshape = (r, num_blocks, cfg.n_kv_heads)
+                c["k_scale"] = jnp.zeros(sshape, jnp.float32)
+                c["v_scale"] = jnp.zeros(sshape, jnp.float32)
         elif spec.mixer == "mamba":
             d_inner, n_heads, conv_dim = mamba.mamba_dims(
                 cfg.d_model, expand=cfg.mamba_expand, headdim=cfg.mamba_headdim,
@@ -333,7 +345,9 @@ def _apply_layer(
         x = layers.rmsnorm(p["mixer_norm"], h)
         kv_cache = None
         if cache is not None and "k" in cache:
-            kv_cache = {"k": cache["k"], "v": cache["v"]}
+            kv_cache = {key: cache[key]
+                        for key in ("k", "v", "k_scale", "v_scale")
+                        if key in cache}
         out, upd = attn_lib.attention_apply(
             p["mixer"], x,
             n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads, head_dim=cfg.head_dim,
@@ -347,7 +361,9 @@ def _apply_layer(
             out = layers.rmsnorm(p["post_mixer_norm"], out)
         h = resid + out
         if upd is not None and new_cache is not None:
-            new_cache["k"], new_cache["v"] = upd["k"], upd["v"]
+            for key in ("k", "v", "k_scale", "v_scale"):
+                if key in upd:
+                    new_cache[key] = upd[key]
     elif spec.mixer == "mamba":
         resid = h
         x = layers.rmsnorm(p["mixer_norm"], h)

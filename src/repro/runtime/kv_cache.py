@@ -55,6 +55,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels import quant
 from repro.models import transformer as T
 from repro.models.transformer import ModelConfig
 
@@ -444,6 +445,7 @@ class PagedKVCache:
         block_size: int,
         num_blocks: int | None = None,
         jit_cache_cap: int | None = None,
+        kv_dtype: str = "fp32",
     ):
         if max_seq % block_size != 0:
             raise ValueError(
@@ -452,6 +454,7 @@ class PagedKVCache:
         if jit_cache_cap is not None and jit_cache_cap < 1:
             raise ValueError(
                 f"jit_cache_cap must be >= 1, got {jit_cache_cap}")
+        self.kv_dtype = quant.validate_kv_dtype(kv_dtype)
         self.cfg = cfg
         self.max_batch = max_batch
         self.max_seq = max_seq
@@ -465,7 +468,8 @@ class PagedKVCache:
         self.num_blocks = num_blocks
         self.allocator = BlockAllocator(num_blocks)
         self.registry = PrefixRegistry()
-        self.pools = T.init_paged_cache(cfg, max_batch, num_blocks, block_size)
+        self.pools = T.init_paged_cache(
+            cfg, max_batch, num_blocks, block_size, kv_dtype=kv_dtype)
         # Host-side table; pushed to device per decode tick (tiny int32s).
         self.page_table = np.full(
             (max_batch, self.max_pages), TRASH_PAGE, np.int32)
@@ -498,10 +502,11 @@ class PagedKVCache:
 
     @property
     def page_bytes(self) -> int:
-        """HBM bytes of one page across all layers (K + V)."""
+        """HBM bytes of one page across all layers (K + V, plus the
+        per-page scale rows when the pool is quantized)."""
         total = 0
         for c in self.pools["blocks"].values():
-            for key in ("k", "v"):
+            for key in ("k", "v", "k_scale", "v_scale"):
                 if key in c:
                     leaf = c[key]
                     total += leaf.size * leaf.dtype.itemsize // self.num_blocks
@@ -750,7 +755,7 @@ class PagedKVCache:
         arrays: dict[str, np.ndarray] = {}
         idx = np.asarray(distinct, np.int64)
         for name, c in self.pools["blocks"].items():
-            for key in ("k", "v"):
+            for key in ("k", "v", "k_scale", "v_scale"):
                 if key in c:
                     arrays[f"pool.{name}.{key}"] = np.asarray(c[key][:, idx])
         for i, (tb, blocks) in enumerate(entries):
@@ -760,6 +765,10 @@ class PagedKVCache:
             "schema": PREFIX_STORE_SCHEMA,
             "model": _config_digest(self.cfg),
             "block_size": self.block_size,
+            # Pool dtype is a staleness key: page bytes written at fp32 are
+            # not loadable codes for an int8 pool (and vice versa), so a
+            # mismatched store must be rejected, never reinterpreted.
+            "kv_dtype": self.kv_dtype,
             "blocks": distinct,
             "n_entries": len(entries),
         }
@@ -798,7 +807,8 @@ class PagedKVCache:
             meta = json.loads(bytes(data["meta"].tobytes()))
             if (meta.get("schema") != PREFIX_STORE_SCHEMA
                     or meta.get("model") != _config_digest(self.cfg)
-                    or meta.get("block_size") != self.block_size):
+                    or meta.get("block_size") != self.block_size
+                    or meta.get("kv_dtype", "fp32") != self.kv_dtype):
                 return 0
             old_ids = [int(b) for b in meta.get("blocks", [])]
             old_set = set(old_ids)
@@ -807,7 +817,7 @@ class PagedKVCache:
                 return 0
             pages: dict[tuple[str, str], np.ndarray] = {}
             for name, c in self.pools["blocks"].items():
-                for key in ("k", "v"):
+                for key in ("k", "v", "k_scale", "v_scale"):
                     if key not in c:
                         continue
                     akey = f"pool.{name}.{key}"
@@ -858,6 +868,7 @@ class PagedKVCache:
 
     def _make_scatter(self, n_pages: int):
         bs = self.block_size
+        kv_dtype = self.kv_dtype
 
         def fn(pools, src, pages, slot, row0):
             out = {"blocks": {}}
@@ -865,13 +876,24 @@ class PagedKVCache:
                 sc = src["blocks"][name]
                 oc = {}
                 for key, leaf in c.items():
+                    if key in ("k_scale", "v_scale"):
+                        continue  # written alongside their data leaf below
                     if key in ("k", "v"):
                         rows = jax.lax.dynamic_slice_in_dim(
                             sc[key][:, 0], row0, n_pages * bs, axis=1)
                         r = rows.shape[0]
-                        rows = rows.reshape(
-                            r, n_pages, bs, *rows.shape[2:]).astype(leaf.dtype)
-                        oc[key] = leaf.at[:, pages].set(rows)
+                        rows = rows.reshape(r, n_pages, bs, *rows.shape[2:])
+                        skey = f"{key}_scale"
+                        if skey in c:
+                            # Quantization fused into the page scatter: the
+                            # pool never holds full-precision rows.
+                            scales = quant.scales_of(rows, kv_dtype)
+                            codes = quant.quantize(rows, scales, kv_dtype)
+                            oc[key] = leaf.at[:, pages].set(codes)
+                            oc[skey] = c[skey].at[:, pages].set(scales)
+                        else:
+                            oc[key] = leaf.at[:, pages].set(
+                                rows.astype(leaf.dtype))
                     else:  # per-slot state (mamba ssm/conv)
                         oc[key] = jax.lax.dynamic_update_slice_in_dim(
                             leaf, sc[key].astype(leaf.dtype), slot, axis=1)
@@ -883,13 +905,21 @@ class PagedKVCache:
     def _make_gather(self, n_pages: int):
         bs = self.block_size
 
+        cdt = self.cfg.compute_dtype
+
         def fn(pools, pages, slot):
             out = {"blocks": {}}
             for name, c in pools["blocks"].items():
                 oc = {}
                 for key, leaf in c.items():
+                    if key in ("k_scale", "v_scale"):
+                        continue  # folded into the dequantized k/v rows
                     if key in ("k", "v"):
                         g = leaf[:, pages]  # (r, n, bs, hkv, hd)
+                        skey = f"{key}_scale"
+                        if skey in c:
+                            g = quant.dequantize(
+                                g, c[skey][:, pages]).astype(cdt)
                         r = g.shape[0]
                         oc[key] = g.reshape(
                             r, n_pages * bs, *g.shape[3:])[:, None]
@@ -912,6 +942,9 @@ class PagedKVCache:
                 for key, leaf in dst.items():
                     if key in ("k", "v") and key in c:
                         g = c[key][:, pages]  # (r, n, bs, hkv, hd)
+                        skey = f"{key}_scale"
+                        if skey in c:
+                            g = quant.dequantize(g, c[skey][:, pages])
                         r = g.shape[0]
                         rows = g.reshape(r, n_pages * bs, *g.shape[3:])[:, None]
                         oc[key] = jax.lax.dynamic_update_slice(
@@ -973,7 +1006,8 @@ class PagedKVCache:
                 for name, c in pools["blocks"].items():
                     oc = {}
                     for key, leaf in c.items():
-                        if key in ("k", "v"):
+                        if key in ("k", "v", "k_scale", "v_scale"):
+                            # the COW fork moves the scale with the page
                             oc[key] = leaf.at[:, d].set(leaf[:, s])
                         else:
                             oc[key] = leaf

@@ -138,7 +138,7 @@ class ServableModel:
         return PagedKVCache(
             self.cfg, max_batch=scfg.max_batch, max_seq=scfg.max_seq,
             block_size=scfg.block_size, num_blocks=scfg.num_blocks,
-            jit_cache_cap=scfg.page_jit_cap)
+            jit_cache_cap=scfg.page_jit_cap, kv_dtype=scfg.kv_dtype)
 
     # -- admission (prefill) ---------------------------------------------------
 

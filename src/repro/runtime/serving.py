@@ -114,6 +114,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import rmetric
+from repro.kernels import quant
 from repro.models import transformer as T
 from repro.models.transformer import ModelConfig
 from repro.runtime.kv_cache import PagedKVCache, _lru_jit
@@ -135,6 +136,14 @@ class ServeConfig:
     paged_kernel: bool | None = None  # decode via the Pallas pool kernel;
     # None = backend default (on for TPU, off elsewhere — the kernel's
     # scalar-prefetched page gather only pays off where Mosaic pipelines it)
+    kv_dtype: str = "fp32"  # pool storage: "fp32" | "int8" | "fp8" —
+    # quantized pools store narrow codes plus per-page, per-kv-head f32
+    # scales (kernels/quant); ~2x effective page capacity at a bounded
+    # greedy-token divergence (parity becomes tolerance-based, not bitwise)
+    fused_prefill: bool | None = None  # write prefill K/V projections
+    # straight into pool blocks through the page table (no contiguous slab
+    # + second jitted scatter); None = on for paged transformer archs,
+    # off elsewhere — resolved by validate_arch once arch_kind is stamped
     prefix_sharing: bool = False  # map common prompt prefixes COW (SYNC once)
     prefix_min_pages: int = 1  # shortest prefix worth sharing, in pages
     # speculative multi-token decode (repro.runtime.spec): a drafter
@@ -193,6 +202,15 @@ class ServeConfig:
             if getattr(self, cap) is not None and getattr(self, cap) < 1:
                 raise ValueError(
                     f"{cap} must be >= 1 when set, got {getattr(self, cap)}")
+        quant.validate_kv_dtype(self.kv_dtype)
+        if quant.is_quantized(self.kv_dtype) and not self.paged:
+            raise ValueError(
+                "kv_dtype quantizes the paged KV pool; it requires "
+                "paged=True (the contiguous cache stays full precision)")
+        if self.fused_prefill and not self.paged:
+            raise ValueError(
+                "fused_prefill writes prefill K/V through the page table; "
+                "it requires paged=True")
         if self.prefix_sharing and not self.paged:
             raise ValueError(
                 "prefix_sharing shares physical KV pages; it requires "
@@ -249,6 +267,23 @@ class ServeConfig:
                     "speculative decode needs the multi-token verify step, "
                     "which has no cross-attention path; serve "
                     "encoder-decoder configs with spec_decode=False")
+        if kind != "transformer":
+            if quant.is_quantized(self.kv_dtype):
+                raise NotImplementedError(
+                    "quantized KV pages cover attention K/V pool blocks; "
+                    f"arch_kind={kind!r} carries cache state (SSM rows / "
+                    "cross-attention slabs) with no per-page scale — serve "
+                    "it with kv_dtype='fp32'")
+            if self.fused_prefill:
+                raise NotImplementedError(
+                    "fused_prefill routes prefill K/V through the decoder "
+                    f"page table; arch_kind={kind!r} prefills through "
+                    "arch-specific caches — leave fused_prefill unset")
+        if self.fused_prefill is None:
+            # Resolved here (not __post_init__) because the default depends
+            # on the architecture: the fused path exists only for the
+            # transformer prefill chain over a paged pool.
+            self.fused_prefill = bool(self.paged) and kind == "transformer"
         if self.state_snapshots and kind != "mamba":
             raise ValueError(
                 "state_snapshots reuse recurrent SSM state across "
@@ -331,6 +366,46 @@ class ServingEngine:
                     cfg, params).astype(jnp.float32).T
                 logits = layers.softcap(logits, cfg.final_softcap)
                 return logits, caches
+
+            return jax.jit(fn)
+
+        return _lru_jit(self._chunk_jit, key, make, cap=self._chunk_jit_cap)
+
+    def _fused_chunk_fn(self, chunk_len: int, pos0: int):
+        """jitted: one prompt chunk whose K/V projections are written
+        directly into the pool's blocks through the page table (prefill →
+        page-scatter fusion) instead of into a contiguous slab that a
+        second jitted scatter copies.  Attention for the chunk reads the
+        context back through the same table with the exact flash-chunk
+        decomposition the contiguous path uses, so the pool contents are
+        bitwise-identical to scatter-after-attention at fp32.
+
+        Transformer-only (no prefix embeds / encoder output): the engine
+        gates on ``ServeConfig.fused_prefill``, which ``validate_arch``
+        resolves to False for every other arch.
+        """
+        key = ("fused", chunk_len, pos0)
+
+        def make():
+            cfg = self.cfg
+
+            def fn(params, pools, page_table, tokens):
+                h = T._embed_tokens(cfg, params, tokens)
+                s = h.shape[1]
+                if cfg.sinusoidal_pos:
+                    from repro.models import layers as _l
+                    h = h + _l.sinusoidal_positions(
+                        pos0 + s, cfg.d_model, cfg.compute_dtype)[None, pos0:]
+                positions = pos0 + jnp.arange(s)
+                h, pools, _ = T.forward_hidden(
+                    cfg, params, h, positions=positions, caches=pools,
+                    causal=True, q_offset=pos0, page_table=page_table)
+                from repro.models import layers
+                h = layers.rmsnorm(params["final_norm"], h)
+                logits = h[:, -1:].astype(jnp.float32) @ T._unembed(
+                    cfg, params).astype(jnp.float32).T
+                logits = layers.softcap(logits, cfg.final_softcap)
+                return logits, pools
 
             return jax.jit(fn)
 
@@ -794,15 +869,16 @@ class StreamedBatchEngine:
             # the trash block, not into the reserved (possibly shared) pages.
             self.kv.shield(slot.index)
         shared_len = shared_pages * self.scfg.block_size
+        use_fused = self.paged and bool(self.scfg.fused_prefill)
         caches0 = None
-        if shared_len:
+        if shared_len and not use_fused:
             # The tail's b=1 prefill context: shared pages gathered into the
             # front of a fresh full-length cache.  The pool pages themselves
             # are never rewritten — the slot reads them through its table.
             caches0 = self.kv.load_prefix(
                 self.servable.init_request_cache(),
                 self.kv.slot_pages(slot.index)[:shared_pages])
-        elif self.servable.snapshots is not None:
+        elif not use_fused and self.servable.snapshots is not None:
             # The SSM degradation of prefix sharing: restore the longest
             # chunk-aligned state snapshot of the prompt and stream only
             # the uncovered tail (same chunk-grid parity argument as the
@@ -815,16 +891,51 @@ class StreamedBatchEngine:
         tokens = jnp.asarray(req.tokens[None, shared_len:], jnp.int32)
         logits = caches = None
         pos = shared_len
-        for logits, caches, pos in self.servable.iter_prefill_chunks(
-                req, tokens, caches=caches0, pos0=shared_len):
-            self.servable.maybe_snapshot(req.tokens, caches, pos)
-            # Chunk is dispatched (async); decode the active slots while it
-            # is in flight — prefill chunk t+1 overlapping decode compute.
-            for _ in range(self.scfg.decode_interleave):
-                if self.active_slots:
-                    self._decode_tick()
+        if use_fused:
+            # Fused prefill→page-scatter: each chunk's K/V projections are
+            # written straight into the slot's pool blocks through its page
+            # table — no contiguous slab, no second jitted scatter, and a
+            # shared prefix is read back through the same table instead of
+            # being gathered into a private context first.  The *host* table
+            # row carries the real pages (the device row stays shielded so
+            # the interleaved ticks' padding writes keep going to trash);
+            # only the pages covering the context so far ride along, so the
+            # compiled shapes depend on (chunk_len, pos0) alone.
+            row = np.full((1, self.kv.max_pages), 0, np.int32)
+            own = self.kv.slot_pages(slot.index)
+            row[0, : len(own)] = own
+            s_total = tokens.shape[1]
+            # Same chunk grid as iter_prefill_chunks (anchored at absolute
+            # position 0), so the fused path dispatches the exact chunk
+            # tasks the legacy path would — fp32 parity is bitwise.
+            chunk = min(self.scfg.prefill_chunk, shared_len + s_total)
+            for lo in range(0, s_total, chunk):
+                piece = tokens[:, lo: lo + chunk]
+                n_ctx = self.kv.pages_for(pos + piece.shape[1])
+                fn = self.single._fused_chunk_fn(piece.shape[1], pos)
+                logits, self.kv.pools = fn(
+                    self.params, self.kv.pools,
+                    jnp.asarray(row[:, :n_ctx]), piece)
+                pos += piece.shape[1]
+                # Chunk is dispatched (async); decode the active slots while
+                # it is in flight — same overlap as the legacy path.
+                for _ in range(self.scfg.decode_interleave):
+                    if self.active_slots:
+                        self._decode_tick()
+        else:
+            for logits, caches, pos in self.servable.iter_prefill_chunks(
+                    req, tokens, caches=caches0, pos0=shared_len):
+                self.servable.maybe_snapshot(req.tokens, caches, pos)
+                # Chunk is dispatched (async); decode the active slots while
+                # it is in flight — prefill chunk t+1 overlapping decode
+                # compute.
+                for _ in range(self.scfg.decode_interleave):
+                    if self.active_slots:
+                        self._decode_tick()
         if self.paged:
-            self.kv.scatter(slot.index, caches, pos, start_page=shared_pages)
+            if not use_fused:  # fused chunks already wrote the pool blocks
+                self.kv.scatter(
+                    slot.index, caches, pos, start_page=shared_pages)
             self.kv.publish(slot.index)
             if self.scfg.prefix_sharing:
                 self.kv.register_prefix(

@@ -38,7 +38,10 @@ from repro.tuning.workload import WorkloadDescriptor
 #: tuned spec_k) — v1 records predate the verify step entirely.
 #: v3: the serving mode grew the servable arch kind + state_snapshots
 #: (model-agnostic engine) — v2 records were all implicitly transformer.
-SCHEMA_VERSION = 3
+#: v4: kv_dtype joined the knob layout (quantized KV pages) and the
+#: serving mode — v3 records were all implicitly fp32 pools, and applying
+#: one would silently discard a tuned quantization choice.
+SCHEMA_VERSION = 4
 
 _DEFAULT_MAX_ENTRIES = 256
 
@@ -88,6 +91,9 @@ def serving_mode(scfg: Any) -> dict:
         # the mode readable and covers kind-specific flags.
         "arch": getattr(scfg, "arch_kind", None),
         "state_snapshots": bool(getattr(scfg, "state_snapshots", False)),
+        # The base pool dtype changes both the parity contract (bitwise vs
+        # tolerance) and every capacity measurement the knobs rest on.
+        "kv_dtype": getattr(scfg, "kv_dtype", "fp32"),
     }
 
 
@@ -143,6 +149,8 @@ class TunedPlan:
     max_seq: int  # geometry the knobs were validated against
     spec_decode: bool = False  # mode flag: the knobs assume speculation
     spec_k: int = 4  # tuned draft length (decode-chunk granularity knob)
+    kv_dtype: str = "fp32"  # tuned pool storage dtype: quantized pages
+    # buy concurrent-slot capacity in the same HBM budget (kernels/quant)
     trials: int = 0  # measured candidates the search paid for
     source: str = "measured"  # "measured" | "analytic" (search short-cut)
     schema: int = SCHEMA_VERSION
@@ -158,6 +166,12 @@ class TunedPlan:
             raise ValueError(
                 f"invalid plan: block_size {self.block_size} does not tile "
                 f"max_seq {self.max_seq}")
+        if self.kv_dtype not in ("fp32", "int8", "fp8"):
+            raise ValueError(
+                f"invalid plan: unknown kv_dtype {self.kv_dtype!r}")
+        if self.kv_dtype != "fp32" and not self.paged:
+            raise ValueError(
+                "invalid plan: quantized kv_dtype requires a paged pool")
 
     @property
     def measured_stage_times(self) -> rmetric.StageTimes:
@@ -209,6 +223,7 @@ class TunedPlan:
             prefix_min_pages=self.prefix_min_pages,
             spec_decode=self.spec_decode,
             spec_k=self.spec_k,
+            kv_dtype=self.kv_dtype,
             chunk_jit_cap=chunk_cap,
             page_jit_cap=page_cap)
 

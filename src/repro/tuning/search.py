@@ -34,6 +34,7 @@ from typing import Any
 import jax
 import numpy as np
 
+from repro.kernels import quant
 from repro.runtime.model_iface import arch_kind_of
 from repro.runtime.serving import StreamedBatchEngine, plan_decode_policy
 from repro.tuning import profiler as prof
@@ -44,12 +45,21 @@ from repro.tuning.workload import WorkloadDescriptor, classify_workload
 #: al.; ``spec_k`` is the decode stream's granularity the way
 #: ``prefill_chunk`` is the prefill stream's), resource knobs after,
 #: binary kernel/registry knobs last.
-_DIMS = ("prefill_chunk", "spec_k", "block_size", "num_blocks", "max_batch",
-         "decode_interleave", "paged_kernel", "prefix_min_pages")
+_DIMS = ("prefill_chunk", "spec_k", "block_size", "num_blocks", "kv_dtype",
+         "max_batch", "decode_interleave", "paged_kernel",
+         "prefix_min_pages")
 
 _MAX_SPEC_K = 16
 
 _MIN_CHUNK = 16
+
+#: Minimum mean greedy-token agreement a quantized candidate must keep
+#: against the fp32 reference outputs.  Bitwise parity is impossible by
+#: construction (the pool stores codes), and greedy divergence cascades
+#: once a single argmax flips, so the guard bounds the *mean per-token*
+#: agreement across the workload instead — a candidate below it is
+#: trading too much output fidelity for capacity and is rejected outright.
+_QUANT_PARITY_MIN = 0.5
 
 
 @dataclasses.dataclass(frozen=True)
@@ -113,6 +123,15 @@ def _candidates(
                   // asg["block_size"]) + 1
         cands = {cur, max(worst + 1, 3 * cur // 4), max(worst + 1, cur // 2)}
         return sorted(c for c in cands if c >= 2)
+    if dim == "kv_dtype":
+        if not scfg.paged:
+            return [cur]  # the contiguous cache stays full precision
+        # Quantized pools are scored at a byte-budget-equalized num_blocks
+        # (see _serve_config), so what the measurement judges is the
+        # capacity each dtype buys per HBM byte; non-transformer archs
+        # reject the candidate at engine construction (validate_arch) and
+        # the measure() guard skips it.
+        return [c for c in ("fp32", "int8", "fp8")]
     if dim == "max_batch":
         hi = max(1, min(desc.n_requests, 2 * cur))
         return sorted({max(1, cur // 2), cur, hi})
@@ -127,17 +146,38 @@ def _candidates(
     raise KeyError(dim)
 
 
-def _serve_config(scfg, asg: dict):
+def _resolved_num_blocks(cfg, scfg, asg: dict) -> int | None:
+    """The pool size a candidate is actually measured with.
+
+    A ``kv_dtype`` candidate keeps the *byte* budget of the assignment's
+    (block_size, num_blocks) at the base dtype and converts it into pages
+    at the candidate dtype — so the measurement judges capacity bought per
+    HBM byte, never a secretly bigger pool.  None (contiguous-parity pool)
+    passes through: its size is derived from max_seq, not a budget.
+    """
+    num_blocks = asg["num_blocks"]
+    if (not scfg.paged or num_blocks is None
+            or asg["kv_dtype"] == scfg.kv_dtype):
+        return num_blocks
+    base_pb = quant.page_bytes_est(
+        asg["block_size"], cfg.n_kv_heads, cfg.head_dim, scfg.kv_dtype)
+    cand_pb = quant.page_bytes_est(
+        asg["block_size"], cfg.n_kv_heads, cfg.head_dim, asg["kv_dtype"])
+    return max(2, num_blocks * base_pb // cand_pb)
+
+
+def _serve_config(cfg, scfg, asg: dict):
     return dataclasses.replace(
         scfg,
         prefill_chunk=asg["prefill_chunk"],
         decode_interleave=asg["decode_interleave"],
         block_size=asg["block_size"],
-        num_blocks=asg["num_blocks"],
+        num_blocks=_resolved_num_blocks(cfg, scfg, asg),
         max_batch=asg["max_batch"],
         paged_kernel=asg["paged_kernel"],
         prefix_min_pages=asg["prefix_min_pages"],
-        spec_k=asg["spec_k"])
+        spec_k=asg["spec_k"],
+        kv_dtype=asg["kv_dtype"])
 
 
 def search_tuned_plan(
@@ -188,6 +228,7 @@ def search_tuned_plan(
             "paged_kernel": scfg.paged_kernel,
             "prefix_min_pages": scfg.prefix_min_pages,
             "spec_k": scfg.spec_k,
+            "kv_dtype": scfg.kv_dtype,
         }
 
     untuned = assignment(
@@ -219,7 +260,7 @@ def search_tuned_plan(
         if trials >= budget.max_trials:
             return None
         try:
-            sc = _serve_config(scfg, asg)
+            sc = _serve_config(cfg, scfg, asg)
             m = prof.measure_workload(
                 lambda: StreamedBatchEngine(cfg, params, sc), desc,
                 vocab_size=cfg.vocab_size, seed=seed,
@@ -235,28 +276,41 @@ def search_tuned_plan(
     ref = measure(untuned)
     assert ref is not None, "the untuned base config must be measurable"
 
-    def parity_ok(m: prof.WorkloadMeasurement) -> bool:
-        return all(np.array_equal(m.outputs[i], ref.outputs[i])
-                   for i in ref.outputs)
+    def parity_ok(m: prof.WorkloadMeasurement, asg: dict) -> bool:
+        """Bitwise token parity for same-dtype candidates; a mean
+        greedy-agreement bound for quantized ones (bitwise is impossible
+        by construction once the pool stores codes — the tolerance-based
+        guard replaces it *only* on quantized paths)."""
+        if asg["kv_dtype"] == untuned["kv_dtype"]:
+            return all(np.array_equal(m.outputs[i], ref.outputs[i])
+                       for i in ref.outputs)
+        agree = [np.mean(np.asarray(m.outputs[i]) ==
+                         np.asarray(ref.outputs[i]))
+                 for i in ref.outputs
+                 if np.asarray(m.outputs[i]).shape ==
+                 np.asarray(ref.outputs[i]).shape]
+        if len(agree) != len(ref.outputs):
+            return False  # a missing/odd-shaped output is never tolerable
+        return float(np.mean(agree)) >= _QUANT_PARITY_MIN
 
-    def score(m: prof.WorkloadMeasurement | None) -> float:
-        if m is None or not parity_ok(m):
+    def score(m: prof.WorkloadMeasurement | None, asg: dict) -> float:
+        if m is None or not parity_ok(m, asg):
             return -np.inf  # never trade tokens for speed
         return m.score(admit_weight=admit_weight)
 
-    def beats(m, incumbent) -> bool:
+    def beats(m, asg, inc_m, inc_asg) -> bool:
         """Challenger must clear the incumbent by the hysteresis margin."""
-        s, si = score(m), score(incumbent)
+        s, si = score(m, asg), score(inc_m, inc_asg)
         return s > si + budget.margin * abs(si)
 
     best_asg, best_m = dict(untuned), ref
     base_m = measure(start)  # the analytic warm start, scored
-    if beats(base_m, best_m):
+    if beats(base_m, start, best_m, best_asg):
         best_asg, best_m = dict(start), base_m
     # The recorded baseline is the analytic start when it measured validly,
     # else the untuned reference; its assignment travels with it so a later
     # promotion can never pair start's knobs with ref's measurements.
-    if base_m is not None and parity_ok(base_m):
+    if base_m is not None and parity_ok(base_m, start):
         baseline, baseline_asg = base_m, dict(start)
     else:
         baseline, baseline_asg = ref, dict(untuned)
@@ -273,7 +327,7 @@ def search_tuned_plan(
                 trial = dict(best_asg)
                 trial[dim] = cand
                 m = measure(trial)
-                if beats(m, best_m):
+                if beats(m, trial, best_m, best_asg):
                     say(f"[tune] {dim}={cand}: "
                         f"{m.tokens_per_s:.1f} tok/s > "
                         f"{best_m.tokens_per_s:.1f}")
@@ -297,7 +351,10 @@ def search_tuned_plan(
         prefill_chunk=best_asg["prefill_chunk"],
         decode_interleave=best_asg["decode_interleave"],
         block_size=best_asg["block_size"],
-        num_blocks=best_asg["num_blocks"],
+        # the byte-budget-equalized pool the winner was *measured* with,
+        # so applying the plan reproduces the measured configuration
+        num_blocks=_resolved_num_blocks(cfg, scfg, best_asg),
+        kv_dtype=best_asg["kv_dtype"],
         max_batch=best_asg["max_batch"],
         paged=scfg.paged,
         paged_kernel=best_asg["paged_kernel"],

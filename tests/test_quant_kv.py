@@ -1,0 +1,364 @@
+"""Quantized KV pages: quantize/dequantize error bounds, scatter/gather
+round-trips through a quantized pool, COW-fork and truncate scale-pool
+consistency, quantized-vs-fp32 engine parity across serving modes, the
+fused prefill->page-scatter bitwise pool check, and the prefix-store
+dtype guard."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.configs as C
+from repro.kernels import quant
+from repro.models import transformer as T
+from repro.runtime.kv_cache import PagedKVCache
+from repro.runtime.serving import (ServeConfig, ServingEngine,
+                                   StreamedBatchEngine)
+
+#: Mean greedy-token agreement quantized engines must keep against the
+#: fp32 reference.  Greedy decode cascades after one flipped argmax, so
+#: the documented tolerance bounds the mean, not every token (it matches
+#: the tuner's quantized parity guard and the bench's A/B gate).
+QUANT_TOL = 0.5
+
+
+@pytest.fixture(scope="module")
+def served():
+    cfg = C.get_smoke_config("qwen3-4b")
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _prompts(cfg, lens, seed=1):
+    return [np.asarray(jax.random.randint(
+        jax.random.PRNGKey(seed + i), (n,), 0, cfg.vocab_size))
+        for i, n in enumerate(lens)]
+
+
+def _agreement(got, want):
+    return float(np.mean([np.mean(np.asarray(a) == np.asarray(b))
+                          for a, b in zip(got, want)]))
+
+
+class TestRoundTripBounds:
+    """The documented reconstruction-error bounds, elementwise."""
+
+    def _rows(self, seed=0, shape=(4, 16, 2, 8)):
+        # (pages, block_size, n_kv_heads, head_dim) with outliers mixed in
+        # so per-head scales actually differ.
+        x = jax.random.normal(jax.random.PRNGKey(seed), shape)
+        return x * jnp.array([1.0, 20.0])[None, None, :, None]
+
+    def test_int8_error_at_most_half_scale(self):
+        rows = self._rows()
+        scale = quant.scales_of(rows, "int8")
+        deq = quant.dequantize(quant.quantize(rows, scale, "int8"), scale)
+        err = np.abs(np.asarray(deq) - np.asarray(rows, np.float32))
+        bound = np.asarray(scale)[..., None, :, None] / 2
+        assert np.all(err <= bound + 1e-6), np.max(err - bound)
+
+    def test_fp8_relative_error_bound(self):
+        rows = self._rows(seed=3)
+        scale = quant.scales_of(rows, "fp8")
+        deq = quant.dequantize(quant.quantize(rows, scale, "fp8"), scale)
+        x = np.asarray(rows, np.float32)
+        err = np.abs(np.asarray(deq) - x)
+        # e4m3: 3 mantissa bits -> relative 2**-3, plus one scale of slack
+        # for the subnormal range near zero.
+        bound = np.abs(x) * 2.0**-3 + np.asarray(scale)[..., None, :, None]
+        assert np.all(err <= bound + 1e-6), np.max(err - bound)
+
+    def test_zero_page_round_trips_exactly(self):
+        rows = jnp.zeros((2, 16, 2, 8))
+        scale = quant.scales_of(rows, "int8")
+        np.testing.assert_array_equal(np.asarray(scale), 0.0)
+        deq = quant.dequantize(quant.quantize(rows, scale, "int8"), scale)
+        np.testing.assert_array_equal(np.asarray(deq), 0.0)
+
+    def test_page_bytes_est_shrinks_quantized_pages(self):
+        fp32 = quant.page_bytes_est(16, 2, 8, "fp32")
+        int8 = quant.page_bytes_est(16, 2, 8, "int8")
+        assert int8 < fp32 / 2  # codes are 1/4 the bytes, scales are small
+        assert int8 == 2 * 16 * 2 * 8 + 2 * 2 * 4
+
+
+class TestQuantKernelOracle:
+    """The fused-dequant Pallas kernels against the pure-jnp oracles."""
+
+    def _pool(self, seed, nb=6, bs=16, hkv=2, hd=8):
+        key = jax.random.PRNGKey(seed)
+        rows = jax.random.normal(key, (nb, bs, hkv, hd))
+        scale = quant.scales_of(rows, "int8")
+        return quant.quantize(rows, scale, "int8"), scale
+
+    def test_paged_attention_quant_matches_ref(self):
+        from repro.kernels import ops, ref
+        b, h, hd = 2, 4, 8
+        q = jax.random.normal(jax.random.PRNGKey(0), (b, h, hd))
+        k_pool, k_scale = self._pool(1)
+        v_pool, v_scale = self._pool(2)
+        pt = jnp.array([[1, 2, 3], [4, 5, 0]], jnp.int32)
+        cl = jnp.array([40, 17], jnp.int32)
+        got = ops.paged_attention_quant(
+            q, k_pool, v_pool, k_scale, v_scale, pt, cl, interpret=True)
+        want = ref.paged_attention_quant_ref(
+            q, k_pool, v_pool, k_scale, v_scale, pt, cl,
+            scale=1.0 / np.sqrt(hd))
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=1e-5, rtol=1e-5)
+
+    def test_paged_attention_multi_quant_matches_ref(self):
+        from repro.kernels import ops, ref
+        b, t, h, hd = 2, 3, 4, 8
+        q = jax.random.normal(jax.random.PRNGKey(3), (b, t, h, hd))
+        k_pool, k_scale = self._pool(4)
+        v_pool, v_scale = self._pool(5)
+        pt = jnp.array([[1, 2, 3], [4, 5, 0]], jnp.int32)
+        cl = jnp.array([33, 12], jnp.int32)
+        got = ops.paged_attention_multi_quant(
+            q, k_pool, v_pool, k_scale, v_scale, pt, cl, interpret=True)
+        want = ref.paged_attention_multi_quant_ref(
+            q, k_pool, v_pool, k_scale, v_scale, pt, cl,
+            scale=1.0 / np.sqrt(hd))
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=1e-5, rtol=1e-5)
+
+
+class TestQuantizedPool:
+    """Scatter/gather round-trips and page-lifecycle scale consistency."""
+
+    def _filled_cache(self, cfg, seq, seed):
+        cache = T.init_cache(cfg, 1, seq, ring=False)
+        for name, c in cache["blocks"].items():
+            for key in ("k", "v"):
+                if key in c:
+                    cache["blocks"][name][key] = jax.random.normal(
+                        jax.random.PRNGKey(seed + hash(name + key) % 997),
+                        c[key].shape, c[key].dtype)
+        return cache
+
+    def _assert_round_trip(self, kv, cache, got, length):
+        bs = kv.block_size
+        n = kv.pages_for(length)
+        for name, c in cache["blocks"].items():
+            for key in ("k", "v"):
+                if key not in c:
+                    continue
+                want = np.asarray(c[key][:, :, : n * bs], np.float32)
+                have = np.asarray(got["blocks"][name][key], np.float32)
+                r, b, _, hkv, hd = want.shape
+                pages = want.reshape(r, b, n, bs, hkv, hd)
+                scale = np.max(np.abs(pages), axis=(3, 5)) / 127.0
+                bound = np.repeat(scale[:, :, :, None], bs, 3) / 2
+                err = np.abs(have[:, :, : n * bs] - want)
+                err = err.reshape(r, b, n, bs, hkv, hd).max(-1)
+                assert np.all(err <= bound + 1e-6), np.max(err - bound)
+
+    def test_scatter_gather_within_half_scale(self, served):
+        cfg, _ = served
+        kv = PagedKVCache(cfg, max_batch=2, max_seq=64, block_size=16,
+                          kv_dtype="int8")
+        assert kv.alloc(0, 40)
+        cache = self._filled_cache(cfg, 48, seed=11)
+        kv.scatter(0, cache, 40)
+        self._assert_round_trip(kv, cache, kv.gather(0, 40), 40)
+
+    def test_truncate_frees_pages_and_reuse_requantizes(self, served):
+        """Scales left behind by dropped pages never leak into the next
+        tenant: truncate, then a fresh scatter over reused pages must
+        round-trip against its *own* per-page scales."""
+        cfg, _ = served
+        kv = PagedKVCache(cfg, max_batch=1, max_seq=64, block_size=16,
+                          kv_dtype="int8")
+        assert kv.alloc(0, 48)
+        kv.scatter(0, self._filled_cache(cfg, 48, seed=23), 48)
+        kv.truncate(0, 16)
+        assert len(kv.slot_pages(0)) == 1
+        assert kv.alloc(0, 48)  # reuses the pages truncate released
+        cache = self._filled_cache(cfg, 48, seed=29)
+        kv.scatter(0, cache, 48)
+        self._assert_round_trip(kv, cache, kv.gather(0, 48), 48)
+
+    def test_cow_fork_copies_scales_with_the_page(self, served):
+        cfg, _ = served
+        kv = PagedKVCache(cfg, max_batch=2, max_seq=64, block_size=16,
+                          kv_dtype="int8")
+        assert kv.alloc(0, 16)
+        blk = kv.slot_pages(0)[0]
+        for name, c in kv.pools["blocks"].items():
+            for key in ("k", "v"):
+                if key in c:
+                    kv.pools["blocks"][name][key] = c[key].at[:, blk].set(3)
+                    skey = f"{key}_scale"
+                    kv.pools["blocks"][name][skey] = (
+                        c[skey].at[:, blk].set(0.5))
+        kv.map_shared(1, [blk])
+        assert kv.ensure_write(1, 3)  # forks the shared page
+        fork = kv.slot_pages(1)[0]
+        assert fork != blk
+        for c in kv.pools["blocks"].values():
+            for key in ("k", "v", "k_scale", "v_scale"):
+                if key in c:  # codes AND scales travel together
+                    np.testing.assert_array_equal(
+                        np.asarray(c[key][:, fork]),
+                        np.asarray(c[key][:, blk]))
+        # the fork's scale diverging stays invisible to the sharer
+        name0 = next(iter(kv.pools["blocks"]))
+        ks = kv.pools["blocks"][name0]["k_scale"]
+        kv.pools["blocks"][name0]["k_scale"] = ks.at[:, fork].set(2.0)
+        np.testing.assert_array_equal(
+            np.asarray(kv.pools["blocks"][name0]["k_scale"][:, blk]), 0.5)
+        kv.release(0)
+        kv.release(1)
+        assert kv.pages_in_use == 0
+
+
+class TestQuantizedEngineParity:
+    """Quantized engines vs the fp32 single-request reference, across the
+    serving modes that read/write the pool differently."""
+
+    LENS = (24, 40, 17)
+
+    def _want(self, served):
+        cfg, params = served
+        scfg = ServeConfig(max_seq=96, prefill_chunk=16, max_new_tokens=6,
+                           max_batch=3)
+        single = ServingEngine(cfg, params, scfg)
+        prompts = _prompts(cfg, self.LENS)
+        return prompts, [np.asarray(single.generate(p[None])[0])
+                         for p in prompts]
+
+    def _run(self, served, prompts, **kw):
+        cfg, params = served
+        base = dict(max_seq=96, prefill_chunk=16, max_new_tokens=6,
+                    max_batch=3, paged=True, block_size=16)
+        base.update(kw)
+        eng = StreamedBatchEngine(cfg, params, ServeConfig(**base))
+        uids = [eng.submit(p) for p in prompts]
+        out = eng.run()
+        return [out[u] for u in uids]
+
+    @pytest.mark.parametrize("kv_dtype", ["int8", "fp8"])
+    def test_paged_parity(self, served, kv_dtype):
+        prompts, want = self._want(served)
+        got = self._run(served, prompts, kv_dtype=kv_dtype)
+        assert all(g.shape == w.shape for g, w in zip(got, want))
+        assert _agreement(got, want) >= QUANT_TOL
+
+    def test_int8_paged_kernel_parity(self, served):
+        prompts, want = self._want(served)
+        got = self._run(served, prompts, kv_dtype="int8", paged_kernel=True)
+        assert _agreement(got, want) >= QUANT_TOL
+
+    def test_int8_spec_decode_parity(self, served):
+        prompts, want = self._want(served)
+        got = self._run(served, prompts, kv_dtype="int8", spec_k=2)
+        assert _agreement(got, want) >= QUANT_TOL
+
+    def test_int8_prefix_sharing_parity(self, served):
+        cfg, params = served
+        system = _prompts(cfg, [32], seed=41)[0]
+        tails = _prompts(cfg, [8, 16, 8], seed=47)
+        prompts = [np.concatenate([system, t]) for t in tails]
+        single = ServingEngine(cfg, params, ServeConfig(
+            max_seq=96, prefill_chunk=16, max_new_tokens=6, max_batch=3))
+        want = [np.asarray(single.generate(p[None])[0]) for p in prompts]
+        got = self._run(served, prompts, kv_dtype="int8",
+                        prefix_sharing=True, prefix_min_pages=2)
+        assert _agreement(got, want) >= QUANT_TOL
+
+    def test_quantized_contiguous_rejected(self):
+        with pytest.raises(ValueError, match="paged"):
+            ServeConfig(max_seq=64, prefill_chunk=16, max_new_tokens=4,
+                        kv_dtype="int8")
+        with pytest.raises(ValueError, match="kv_dtype"):
+            ServeConfig(max_seq=64, prefill_chunk=16, max_new_tokens=4,
+                        paged=True, block_size=16, kv_dtype="int4")
+
+    def test_fused_prefill_requires_paged(self):
+        with pytest.raises(ValueError, match="paged"):
+            ServeConfig(max_seq=64, prefill_chunk=16, max_new_tokens=4,
+                        fused_prefill=True)
+
+
+class TestFusedPrefillScatter:
+    """The fusion acceptance bar: at fp32, prefill chunks writing K/V
+    straight through the page table must leave the pool bitwise identical
+    to the legacy scatter-after-attention path, with identical tokens."""
+
+    def test_fused_pool_bitwise_identical_fp32(self, served):
+        cfg, params = served
+        prompts = _prompts(cfg, [24, 40, 17])
+        base = dict(max_seq=96, prefill_chunk=16, max_new_tokens=6,
+                    max_batch=3, paged=True, block_size=16)
+        engines = {}
+        outs = {}
+        for fused in (False, True):
+            eng = StreamedBatchEngine(cfg, params, ServeConfig(
+                **base, fused_prefill=fused))
+            assert eng.scfg.fused_prefill is fused
+            uids = [eng.submit(p) for p in prompts]
+            out = eng.run()
+            engines[fused] = eng
+            outs[fused] = [out[u] for u in uids]
+        for g, w in zip(outs[True], outs[False]):
+            np.testing.assert_array_equal(g, w)
+        # same admission order -> same page assignment -> the pools must
+        # match bitwise, trash page and all
+        legacy, fused = engines[False].kv.pools, engines[True].kv.pools
+        for name, c in legacy["blocks"].items():
+            for key, leaf in c.items():
+                np.testing.assert_array_equal(
+                    np.asarray(leaf), np.asarray(fused["blocks"][name][key]),
+                    err_msg=f"{name}/{key}")
+
+    def test_fused_defaults_on_for_paged_transformer(self, served):
+        cfg, params = served
+        scfg = ServeConfig(max_seq=64, prefill_chunk=16, max_new_tokens=4,
+                           max_batch=2, paged=True, block_size=16)
+        StreamedBatchEngine(cfg, params, scfg)
+        assert scfg.fused_prefill is True
+        off = ServeConfig(max_seq=64, prefill_chunk=16, max_new_tokens=4,
+                          max_batch=2)
+        StreamedBatchEngine(cfg, params, off)
+        assert off.fused_prefill is False  # contiguous engine never fuses
+
+
+class TestPrefixStoreDtype:
+    """A persisted prefix registry pins its pool dtype: quantized pages
+    must never be restored into a pool that would reinterpret the codes."""
+
+    def _stocked_kv(self, cfg, kv_dtype, seed=61):
+        kv = PagedKVCache(cfg, max_batch=2, max_seq=64, block_size=16,
+                          kv_dtype=kv_dtype)
+        assert kv.alloc(0, 32)
+        cache = TestQuantizedPool()._filled_cache(cfg, 32, seed=seed)
+        kv.scatter(0, cache, 32)
+        tokens = _prompts(cfg, [32], seed=seed)[0]
+        kv.register_prefix(tokens, 0, align_tokens=16)
+        return kv, tokens
+
+    def test_store_pins_kv_dtype(self, served, tmp_path):
+        cfg, _ = served
+        kv1, tokens = self._stocked_kv(cfg, "int8")
+        path = tmp_path / "prefixes.npz"
+        assert kv1.save_prefixes(path) > 0
+
+        fp32 = PagedKVCache(cfg, max_batch=2, max_seq=64, block_size=16)
+        assert fp32.load_prefixes(path) == 0  # dtype mismatch: rejected
+
+        kv2 = PagedKVCache(cfg, max_batch=2, max_seq=64, block_size=16,
+                           kv_dtype="int8")
+        assert kv2.load_prefixes(path) > 0
+        probe = np.concatenate([tokens, _prompts(cfg, [8], seed=99)[0]])
+        n_pages, blocks = kv2.lookup_prefix(probe, align_tokens=16)
+        assert n_pages == 2
+        kv2.map_shared(0, blocks)
+        # codes and scales restored exactly -> identical dequantized rows
+        got, want = kv2.gather(0, 32), kv1.gather(0, 32)
+        for name, c in want["blocks"].items():
+            for key, leaf in c.items():
+                np.testing.assert_array_equal(
+                    np.asarray(got["blocks"][name][key]), np.asarray(leaf),
+                    err_msg=f"{name}/{key}")

@@ -172,6 +172,11 @@ class TestTuningDB:
         spec = ServeConfig(max_seq=128, spec_decode=True)
         assert (tdb.fingerprint(cfg, d, spec, **kw)
                 != tdb.fingerprint(cfg, d, flat, **kw))
+        # ... nor quantized and fp32 pools (a chunk tuned against int8
+        # page traffic means nothing for an fp32 pool)
+        quant_sc = ServeConfig(max_seq=128, paged=True, kv_dtype="int8")
+        assert (tdb.fingerprint(cfg, d, quant_sc, **kw)
+                != tdb.fingerprint(cfg, d, paged, **kw))
 
     def test_round_trip(self, tmp_path):
         path = tmp_path / "tuning.json"
@@ -194,6 +199,15 @@ class TestTuningDB:
         raw["entries"][0]["schema"] = tdb.SCHEMA_VERSION + 1
         path.write_text(json.dumps(raw))
         assert tdb.TuningDB(path).get("abc123") is None  # entry-level
+        # a pre-kv_dtype (v3) store is rejected wholesale too: its plans
+        # were measured without the quantized-pool dimension, and their
+        # num_blocks was never byte-budget-equalized
+        raw["schema"] = tdb.SCHEMA_VERSION - 1
+        raw["entries"][0]["schema"] = tdb.SCHEMA_VERSION - 1
+        for entry in raw["entries"]:
+            entry.pop("kv_dtype", None)
+        path.write_text(json.dumps(raw))
+        assert tdb.TuningDB(path).get("abc123") is None
 
     def test_corrupt_file_falls_back_to_retune(self, tmp_path):
         path = tmp_path / "tuning.json"
@@ -229,6 +243,19 @@ class TestTuningDB:
         base = ServeConfig(max_seq=128, paged=True, spec_decode=True)
         sc = got.apply(base)
         assert sc.spec_decode and sc.spec_k == 2
+
+    def test_kv_dtype_round_trips_and_applies(self, tmp_path):
+        plan = _plan(kv_dtype="int8", num_blocks=12)
+        db = tdb.TuningDB(tmp_path / "t.json")
+        db.put(plan)
+        got = tdb.TuningDB(tmp_path / "t.json").get("abc123")
+        assert got == plan and got.kv_dtype == "int8"
+        sc = got.apply(ServeConfig(max_seq=128, paged=True))
+        assert sc.kv_dtype == "int8"
+        # same tuned max_seq -> the byte-budget-equalized pool travels too
+        assert sc.num_blocks == 12
+        with pytest.raises(ValueError):
+            _plan(kv_dtype="int4")
 
     def test_apply_round_trips_into_serve_config(self):
         plan = _plan()
