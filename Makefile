@@ -1,15 +1,19 @@
 # Test entry points.  Tier-1 is the gate every PR must keep green; the slow
 # tier covers the heavy end-to-end paths, including the prefix-sharing
-# serving bench smoke (tests/test_serving.py -m slow).
+# serving bench smoke (tests/test_serving.py -m slow).  lint-streams is the
+# stream-safety analyzer (required in CI alongside tier-1).
 PYTHONPATH := src
 
-.PHONY: test test-slow bench tune
+.PHONY: test test-slow lint-streams bench tune
 
 test:  ## tier-1 gate (pytest.ini already excludes -m slow)
 	PYTHONPATH=$(PYTHONPATH) python -m pytest -x -q -m "not slow"
 
 test-slow:  ## heavy end-to-end paths + the sharing bench smoke
 	PYTHONPATH=$(PYTHONPATH) python -m pytest -q -m slow
+
+lint-streams:  ## stream-safety analyzer: sync audit, kernel lint, pool audit
+	PYTHONPATH=$(PYTHONPATH) JAX_PLATFORMS=cpu python -m repro.analysis
 
 bench:  ## paper-figure benchmarks (CSV to stdout)
 	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.run

@@ -1,0 +1,83 @@
+"""CLI gate: ``python -m repro.analysis`` (or ``make lint-streams``).
+
+Runs all three passes — the jaxpr-level sync/transfer audit over every
+arch x serving mode, the Pallas kernel lint, and the pool-invariant
+audit — applies the waiver file, prints the findings, and exits non-zero
+on any unwaived finding.  ``--json`` writes the full machine-readable
+report (the committed ``BENCH_analysis.json`` is this report generated
+on a clean tree).
+"""
+
+from __future__ import annotations
+
+import argparse
+import collections
+import json
+import sys
+import time
+
+from repro.analysis import RULES, apply_waivers, load_waivers
+
+
+def run(archs=None, modes=None) -> dict:
+    """Run all three passes; returns the raw report dict."""
+    from repro.analysis import kernelcheck, poolcheck, synccheck
+
+    t0 = time.perf_counter()
+    findings, reports = synccheck.audit_matrix(archs, modes)
+    findings += kernelcheck.audit_kernels()
+    findings += poolcheck.audit_pools()
+    wall = time.perf_counter() - t0
+    rules = collections.Counter(f.rule for f in findings)
+    return {
+        "schema": "repro.analysis/1",
+        "wall_s": round(wall, 2),
+        "paths_audited": len(reports),
+        "rules": {rid: rules.get(rid, 0) for rid in sorted(RULES)},
+        "paths": [r.to_dict() for r in reports],
+        "findings": findings,  # Finding objects; serialized by main()
+    }
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="Stream-safety analyzer: sync/transfer audit, Pallas "
+        "kernel lint, pool-invariant audit.")
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="write the full JSON report here")
+    ap.add_argument("--waivers", metavar="PATH", default="stream_waivers.json",
+                    help="waiver file (default: stream_waivers.json)")
+    ap.add_argument("--arch", action="append", default=None,
+                    help="restrict pass 1 to this arch (repeatable)")
+    ap.add_argument("--mode", action="append", default=None,
+                    help="restrict pass 1 to this serving mode (repeatable)")
+    args = ap.parse_args(argv)
+
+    report = run(args.arch, args.mode)
+    findings = report.pop("findings")
+    waivers = load_waivers(args.waivers)
+    unwaived, waived = apply_waivers(findings, waivers)
+    report["findings"] = [f.to_dict() for f in unwaived]
+    report["waived"] = [f.to_dict() for f in waived]
+
+    if args.json:
+        with open(args.json, "w") as fh:
+            json.dump(report, fh, indent=2)
+            fh.write("\n")
+
+    print(f"repro.analysis: {report['paths_audited']} paths audited "
+          f"in {report['wall_s']}s")
+    for f in waived:
+        print(f"  waived: {f}")
+    for f in unwaived:
+        print(f"  {f}")
+    if unwaived:
+        print(f"FAILED: {len(unwaived)} unwaived finding(s)")
+        return 1
+    print("clean: no unwaived findings")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

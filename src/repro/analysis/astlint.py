@@ -1,0 +1,318 @@
+"""AST lint for ``@tick_path`` methods: Python-level host syncs.
+
+The jaxpr pass (``synccheck``) sees inside jitted steps; this pass sees
+the Python glue *between* them — the per-tick driver methods where a
+stray ``int(device_scalar)`` or ``bool(x.sum())`` silently serializes
+the stream.  It runs a small order-sensitive taint analysis over each
+function marked ``@tick_path(allowed_fetches=N)``:
+
+* values produced by ``jnp.*`` / ``jax.*`` calls, by ``*_jit``
+  attributes, or by callables returned from ``*_fn`` builders are
+  **device** values; methods on device values stay device;
+* ``host_fetch(x)`` / ``np.asarray(x)`` on a device value is a
+  sanctioned fetch (counted against ``allowed_fetches`` -> STR002 when
+  exceeded); ``jax.device_get`` counts the same way;
+* ``int()`` / ``float()`` / ``bool()`` / ``.item()`` on a device value,
+  or a device value in an ``if``/``while`` test or ``for`` iterator, is
+  a hidden host sync -> STR001;
+* ``jnp.asarray`` / ``jnp.array`` / ``jax.device_put`` of a bare name
+  that the function neither binds nor receives is per-tick re-staging of
+  data that should have been staged at admission -> STR004.
+
+Loop-carried taint is handled by running each body twice and reporting
+only on the second pass.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterable
+
+from repro.analysis import Finding
+
+DEVICE_ROOTS = {"jnp", "jax"}
+HOST_COERCIONS = {"int", "float", "bool"}
+FETCH_NAMES = {"host_fetch"}
+STAGING_ATTRS = {("jnp", "asarray"), ("jnp", "array"),
+                 ("jax", "device_put")}
+# numpy results are host-side by construction
+HOST_ROOTS = {"np", "numpy", "math"}
+
+
+def _dotted_root(node: ast.expr) -> str | None:
+    """Leftmost name of a Name/Attribute chain (``jnp.argmax`` -> jnp)."""
+    while isinstance(node, (ast.Attribute, ast.Subscript)):
+        node = node.value
+    return node.id if isinstance(node, ast.Name) else None
+
+
+def _decorator_name(dec: ast.expr) -> str | None:
+    node = dec.func if isinstance(dec, ast.Call) else dec
+    if isinstance(node, ast.Attribute):
+        return node.attr
+    if isinstance(node, ast.Name):
+        return node.id
+    return None
+
+
+def _tick_decorator(fn: ast.FunctionDef) -> ast.expr | None:
+    for dec in fn.decorator_list:
+        if _decorator_name(dec) == "tick_path":
+            return dec
+    return None
+
+
+def _allowed_fetches(dec: ast.expr) -> int:
+    if isinstance(dec, ast.Call):
+        for kw in dec.keywords:
+            if kw.arg == "allowed_fetches" and isinstance(
+                    kw.value, ast.Constant):
+                return int(kw.value.value)
+    return 0
+
+
+def _assigned_names(fn: ast.FunctionDef) -> set[str]:
+    """Every name the function binds (params, assignments, loops, withs)."""
+    names = {a.arg for a in fn.args.args + fn.args.kwonlyargs}
+    if fn.args.vararg:
+        names.add(fn.args.vararg.arg)
+    if fn.args.kwarg:
+        names.add(fn.args.kwarg.arg)
+    for node in ast.walk(fn):
+        if isinstance(node, (ast.Assign, ast.AugAssign, ast.AnnAssign,
+                             ast.For, ast.comprehension)):
+            targets = (node.targets if isinstance(node, ast.Assign)
+                       else [node.target])
+            for t in targets:
+                for sub in ast.walk(t):
+                    if isinstance(sub, ast.Name):
+                        names.add(sub.id)
+        elif isinstance(node, ast.withitem) and node.optional_vars:
+            for sub in ast.walk(node.optional_vars):
+                if isinstance(sub, ast.Name):
+                    names.add(sub.id)
+        elif isinstance(node, ast.NamedExpr):
+            names.add(node.target.id)
+    return names
+
+
+class _FnLint:
+    """Taint walk over one @tick_path function."""
+
+    def __init__(self, fn: ast.FunctionDef, target: str):
+        self.fn = fn
+        self.target = target
+        self.allowed = _allowed_fetches(_tick_decorator(fn))
+        self.bound = _assigned_names(fn)
+        self.tainted: set[str] = set()
+        self.dev_callables: set[str] = set()
+        self.fetches: list[int] = []  # linenos of sanctioned fetches
+        self.findings: list[Finding] = []
+        self.report = False  # second pass only
+
+    # -- device-ness of an expression ------------------------------------
+
+    def is_device(self, node: ast.expr) -> bool:
+        if isinstance(node, ast.Name):
+            return node.id in self.tainted
+        if isinstance(node, (ast.Attribute, ast.Subscript, ast.Starred)):
+            return self.is_device(node.value)
+        if isinstance(node, ast.Call):
+            return self.call_is_device(node)
+        if isinstance(node, ast.BinOp):
+            return self.is_device(node.left) or self.is_device(node.right)
+        if isinstance(node, ast.UnaryOp):
+            return self.is_device(node.operand)
+        if isinstance(node, ast.Compare):
+            return self.is_device(node.left) or any(
+                self.is_device(c) for c in node.comparators)
+        if isinstance(node, ast.BoolOp):
+            return any(self.is_device(v) for v in node.values)
+        if isinstance(node, (ast.Tuple, ast.List)):
+            return any(self.is_device(e) for e in node.elts)
+        if isinstance(node, ast.IfExp):
+            return self.is_device(node.body) or self.is_device(node.orelse)
+        return False
+
+    def call_is_device(self, node: ast.Call) -> bool:
+        func = node.func
+        if isinstance(func, ast.Name):
+            if func.id in self.dev_callables:
+                return True
+            return False  # int()/np-free helpers: host (coercion flagged elsewhere)
+        if isinstance(func, ast.Attribute):
+            root = _dotted_root(func)
+            if root in HOST_ROOTS:
+                return False
+            if root in DEVICE_ROOTS:
+                # jax.device_get is the one D2H in the jax namespace
+                return func.attr != "device_get"
+            if func.attr.endswith("_jit"):
+                return True
+            # method on a device value (x.sum(), x.astype(...))
+            if self.is_device(func.value):
+                return func.attr != "item"  # .item() is host (and a sync)
+        return False
+
+    # -- fetch / sync classification of one Call -------------------------
+
+    def scan_call(self, node: ast.Call) -> None:
+        func = node.func
+        args_device = any(self.is_device(a) for a in node.args)
+        name = func.id if isinstance(func, ast.Name) else None
+        attr = func.attr if isinstance(func, ast.Attribute) else None
+        root = _dotted_root(func) if isinstance(func, ast.Attribute) else None
+
+        if name in FETCH_NAMES and args_device:
+            self.fetches.append(node.lineno)
+        elif root in HOST_ROOTS and attr in {"asarray", "array"} \
+                and args_device:
+            self.fetches.append(node.lineno)
+        elif root == "jax" and attr == "device_get":
+            self.fetches.append(node.lineno)
+        elif name in HOST_COERCIONS and args_device:
+            self.emit("STR001", node.lineno,
+                      f"{name}() coerces a device value to host "
+                      "(implicit blocking D2H)")
+        elif attr == "item" and isinstance(func, ast.Attribute) \
+                and self.is_device(func.value):
+            self.emit("STR001", node.lineno,
+                      ".item() on a device value (implicit blocking D2H)")
+
+        # STR004: per-tick H2D restage of a name this function never binds
+        if isinstance(func, ast.Attribute) and root in DEVICE_ROOTS \
+                and (root, attr) in STAGING_ATTRS and node.args:
+            arg = node.args[0]
+            if isinstance(arg, ast.Name) and arg.id not in self.bound:
+                self.emit("STR004", node.lineno,
+                          f"jnp staging of '{arg.id}' (not bound in this "
+                          "function) re-uploads admission-time data every "
+                          "tick")
+
+    def emit(self, rule: str, lineno: int, msg: str) -> None:
+        if self.report:
+            self.findings.append(Finding(
+                rule=rule, target=f"{self.target}:{lineno}",
+                message=msg, pass_name="sync"))
+
+    # -- statement walk ---------------------------------------------------
+
+    def taint_target(self, target: ast.expr, device: bool) -> None:
+        if isinstance(target, ast.Name):
+            (self.tainted.add if device
+             else self.tainted.discard)(target.id)
+        elif isinstance(target, (ast.Tuple, ast.List)):
+            for e in target.elts:
+                self.taint_target(e, device)
+        elif isinstance(target, ast.Starred):
+            self.taint_target(target.value, device)
+        # attribute/subscript targets: not tracked as locals
+
+    def handle_assign_value(self, value: ast.expr) -> bool:
+        """Device-ness of an assigned value, honoring fetch semantics."""
+        if isinstance(value, ast.Call):
+            func = value.func
+            name = func.id if isinstance(func, ast.Name) else None
+            attr = func.attr if isinstance(func, ast.Attribute) else None
+            root = (_dotted_root(func)
+                    if isinstance(func, ast.Attribute) else None)
+            if name in FETCH_NAMES or (
+                    root in HOST_ROOTS and attr in {"asarray", "array"}) \
+                    or (root == "jax" and attr == "device_get"):
+                return False  # fetched -> host (counted in scan_call)
+            if attr is not None and attr.endswith("_fn"):
+                return False  # builder: handled as dev_callable by caller
+        return self.is_device(value)
+
+    def walk_stmts(self, stmts: Iterable[ast.stmt]) -> None:
+        for stmt in stmts:
+            for call in [n for n in ast.walk(stmt)
+                         if isinstance(n, ast.Call)]:
+                self.scan_call(call)
+
+            if isinstance(stmt, (ast.Assign, ast.AnnAssign, ast.AugAssign)):
+                value = stmt.value
+                targets = (stmt.targets if isinstance(stmt, ast.Assign)
+                           else [stmt.target])
+                if value is None:
+                    continue
+                # builder call -> the bound name is a device callable
+                if isinstance(value, ast.Call) and isinstance(
+                        value.func, ast.Attribute) \
+                        and value.func.attr.endswith("_fn"):
+                    for t in targets:
+                        if isinstance(t, ast.Name):
+                            self.dev_callables.add(t.id)
+                    continue
+                device = self.handle_assign_value(value)
+                for t in targets:
+                    self.taint_target(t, device)
+            elif isinstance(stmt, (ast.If, ast.While)):
+                if self.is_device(stmt.test):
+                    self.emit("STR001", stmt.lineno,
+                              "branching on a device value (implicit "
+                              "blocking D2H in the test)")
+                self.walk_stmts(stmt.body)
+                self.walk_stmts(stmt.orelse)
+            elif isinstance(stmt, ast.For):
+                if self.is_device(stmt.iter):
+                    self.emit("STR001", stmt.lineno,
+                              "iterating a device value (implicit "
+                              "blocking D2H per element)")
+                self.taint_target(stmt.target, False)
+                self.walk_stmts(stmt.body)
+                self.walk_stmts(stmt.orelse)
+            elif isinstance(stmt, ast.With):
+                self.walk_stmts(stmt.body)
+            elif isinstance(stmt, ast.Try):
+                self.walk_stmts(stmt.body)
+                for h in stmt.handlers:
+                    self.walk_stmts(h.body)
+                self.walk_stmts(stmt.orelse)
+                self.walk_stmts(stmt.finalbody)
+            elif isinstance(stmt, ast.Return) and stmt.value is not None:
+                # returning a raw device value from a tick-path fn is fine
+                # (the caller decides); coercions were scanned above.
+                pass
+
+    def run(self) -> list[Finding]:
+        # pass 1: propagate taint (incl. loop-carried); pass 2: report
+        self.walk_stmts(self.fn.body)
+        self.report = True
+        self.fetches = []
+        self.walk_stmts(self.fn.body)
+        if len(self.fetches) > self.allowed:
+            self.findings.append(Finding(
+                rule="STR002",
+                target=f"{self.target}:{self.fn.lineno}",
+                message=(f"{len(self.fetches)} sanctioned fetches on a "
+                         f"tick path declaring allowed_fetches="
+                         f"{self.allowed} (lines {self.fetches})"),
+                pass_name="sync"))
+        return self.findings
+
+
+def lint_source(source: str, module_name: str) -> list[Finding]:
+    """Lint every ``@tick_path`` function in a module's source text."""
+    tree = ast.parse(source)
+    findings: list[Finding] = []
+    stack: list[tuple[str, ast.AST]] = [("", tree)]
+    while stack:
+        prefix, node = stack.pop()
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, ast.ClassDef):
+                stack.append((f"{prefix}{child.name}.", child))
+            elif isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                if isinstance(child, ast.FunctionDef) \
+                        and _tick_decorator(child) is not None:
+                    target = f"{module_name}.{prefix}{child.name}"
+                    findings.extend(_FnLint(child, target).run())
+                stack.append((f"{prefix}{child.name}.", child))
+    return findings
+
+
+def lint_module(module) -> list[Finding]:
+    """Lint a live module object (reads its source file)."""
+    import inspect
+
+    return lint_source(inspect.getsource(module), module.__name__)

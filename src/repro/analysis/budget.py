@@ -1,0 +1,95 @@
+"""Transfer-budget and tick-path annotations: the analyzer's contract.
+
+The stream-safety analyzer (``repro.analysis``) audits the engine's hot
+paths against budgets *declared next to the code they govern*:
+
+* :func:`transfer_budget` decorates a **step builder** (a method that
+  returns a jitted step, e.g. ``ServableModel.decode_fn``) with the
+  device->host traffic the step is allowed per tick.  The analyzer traces
+  the built step to a jaxpr and compares the fetched outputs' sizes
+  against this declaration (rule ``STR002``).
+* :func:`tick_path` decorates a **Python-level method** on the tick path
+  (e.g. ``StreamedBatchEngine._plain_tick``) with how many sanctioned
+  fetches it may perform.  The AST lint (``analysis.astlint``) counts
+  :func:`host_fetch` / ``np.asarray(device)`` calls against it and flags
+  any implicit sync — ``int()`` / ``bool()`` / ``.item()`` on a device
+  value — as a hidden host sync (rule ``STR001``).
+* :func:`host_fetch` is the one sanctioned way to move a device array to
+  the host on a tick path: it is what the lint counts.  Anything else
+  that blocks on device data is a finding.
+
+This module must stay importable by the runtime without dragging in the
+analyzer (or even jax): numpy only.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Tuple
+
+import numpy as np
+
+BUDGET_ATTR = "__transfer_budget__"
+TICK_ATTR = "__tick_path__"
+
+
+@dataclasses.dataclass(frozen=True)
+class TransferBudget:
+    """Per-tick D2H allowance for one jitted engine step.
+
+    ``d2h_arrays``
+        How many of the step's output arrays the host fetches per tick.
+    ``d2h_outputs``
+        Indices into the step's (flattened top-level) output tuple that
+        the host actually fetches — the analyzer sizes exactly these.
+    ``d2h_bytes_per_slot``
+        Byte budget per batch slot for the fetched outputs; an int, a
+        callable ``scfg -> int`` (for budgets that scale with a config
+        knob like ``spec_k``), or None for "arrays-only" budgets.
+    """
+
+    d2h_arrays: int = 0
+    d2h_outputs: Tuple[int, ...] = ()
+    d2h_bytes_per_slot: Any = None
+
+    def bytes_limit(self, scfg: Any = None) -> int | None:
+        b = self.d2h_bytes_per_slot
+        return b(scfg) if callable(b) else b
+
+
+def transfer_budget(*, d2h_arrays: int = 0, d2h_outputs=(),
+                    d2h_bytes_per_slot=None) -> Callable:
+    """Declare the per-tick D2H budget of the step a builder returns."""
+    budget = TransferBudget(int(d2h_arrays), tuple(d2h_outputs),
+                            d2h_bytes_per_slot)
+
+    def deco(fn):
+        setattr(fn, BUDGET_ATTR, budget)
+        return fn
+
+    return deco
+
+
+def tick_path(fn=None, *, allowed_fetches: int = 0):
+    """Mark a Python-level method as on the engine tick path.
+
+    The AST lint audits every marked function: implicit host syncs are
+    STR001, and more than ``allowed_fetches`` sanctioned fetches is
+    STR002.  Usable bare (``@tick_path``) or parameterized.
+    """
+
+    def deco(f):
+        setattr(f, TICK_ATTR, {"allowed_fetches": int(allowed_fetches)})
+        return f
+
+    return deco(fn) if fn is not None else deco
+
+
+def budget_of(fn) -> TransferBudget | None:
+    """The declared budget of a builder, seen through functools wrappers."""
+    return getattr(fn, BUDGET_ATTR, None)
+
+
+def host_fetch(x) -> np.ndarray:
+    """The sanctioned D2H transfer on a tick path (counted by the lint)."""
+    return np.asarray(x)

@@ -138,6 +138,86 @@ def classify(workload: Workload) -> Category:
 
 
 # ----------------------------------------------------------------------------
+# Jaxpr ingestion (the stream-safety analyzer's bridge into this vocabulary).
+# ----------------------------------------------------------------------------
+
+
+def step_footprint(
+    closed_jaxpr, in_regions: Sequence[str], out_regions: Sequence[str],
+) -> tuple[frozenset[str], frozenset[str]]:
+    """Region read/write sets of one traced engine step.
+
+    ``in_regions``/``out_regions`` label each *flattened* input/output leaf
+    of the jaxpr with the data region it belongs to (``"params"``, ``"kv"``,
+    ``"prompt"``, ...).  Inputs the jaxpr never uses are eliminated (DCE)
+    and drop out of the read set — so a decode step that claims to read the
+    cache but doesn't actually shows up as not reading it, and the derived
+    category diverges from the classifier's (analyzer rule STR005).
+
+    Returns ``(reads, writes)`` frozensets of region names — the same
+    vocabulary :class:`Task` uses, so a step's footprint plugs straight
+    into :func:`unroll_stream` / :func:`classify`.
+    """
+    from jax.interpreters import partial_eval as pe  # lazy: keep jax-free
+
+    jaxpr = closed_jaxpr.jaxpr
+    if len(in_regions) != len(jaxpr.invars):
+        raise ValueError(
+            f"{len(in_regions)} in_regions for {len(jaxpr.invars)} invars")
+    if len(out_regions) != len(jaxpr.outvars):
+        raise ValueError(
+            f"{len(out_regions)} out_regions for {len(jaxpr.outvars)} "
+            "outvars")
+    _, used = pe.dce_jaxpr(jaxpr, [True] * len(jaxpr.outvars))
+    reads = frozenset(r for r, u in zip(in_regions, used) if u)
+    return reads, frozenset(out_regions)
+
+
+def unroll_stream(
+    name: str,
+    *,
+    per_task_reads: Sequence[str],
+    writes: Sequence[str] = ("out",),
+    carrier: str | None = None,
+    shared_reads: Sequence[str] = (),
+    n_tasks: int = 4,
+    kernel_iterations: int = 1,
+    head: tuple[str, Sequence[str], Sequence[str]] | None = None,
+    sequential_kernel: bool = False,
+) -> Workload:
+    """Unroll one step's footprint into the task stream the engine runs.
+
+    The analyzer derives a step's footprint from its jaxpr
+    (:func:`step_footprint`) and repeats it: task ``t`` reads its own slice
+    of each region in ``per_task_reads`` plus every ``shared_reads`` region
+    whole; with ``carrier`` set (the RAW handoff — KV pages, SSM state)
+    task ``t`` additionally reads the carrier slice task ``t-1`` wrote and
+    writes its own, otherwise it writes its own slice of each region in
+    ``writes``.  ``head`` prepends a one-shot stage task ``(name, reads,
+    writes)`` (whisper's encode).  The result classifies exactly like
+    ``tuning.workload.to_task_graph``'s hand-built graphs — which is the
+    point: the hand-built shapes become a cross-check, not the source of
+    truth.
+    """
+    tasks: list[Task] = []
+    if head is not None:
+        hname, hreads, hwrites = head
+        tasks.append(Task.make(hname, hreads, hwrites))
+    for t in range(n_tasks):
+        reads = {f"{r}[{t}]" for r in per_task_reads}
+        reads.update(shared_reads)
+        if carrier is not None:
+            if t > 0:
+                reads.add(f"{carrier}[{t - 1}]")
+            task_writes = {f"{carrier}[{t}]"}
+        else:
+            task_writes = {f"{w}[{t}]" for w in writes}
+        tasks.append(Task.make(f"t{t}", reads, task_writes))
+    return Workload(name, tasks, kernel_iterations=kernel_iterations,
+                    sequential_kernel=sequential_kernel)
+
+
+# ----------------------------------------------------------------------------
 # Model task graphs for the paper's benchmarks (Table 2 reproduction).
 # ----------------------------------------------------------------------------
 

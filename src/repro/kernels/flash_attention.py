@@ -105,6 +105,46 @@ def _flash_kernel(
         o_ref[0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
 
 
+def build_specs(bh: int, sq: int, sk: int, hd: int, bq: int, bk: int) -> dict:
+    """Grid/BlockSpec layout shared by the kernel call *and* the analyzer's
+    kernel lint (``analysis.kernelcheck``) — one source of truth, so a spec
+    edit that stops matching the operand shapes is caught statically.
+
+    ``operands``/``out_shape`` are the wrapper-declared shapes each
+    BlockSpec must tile exactly (same order as ``in_specs``).
+    """
+    n_q, n_k = sq // bq, sk // bk
+    return dict(
+        grid=(bh, n_q, n_k),
+        num_scalar_prefetch=0,
+        in_specs=[
+            pl.BlockSpec((1, bq, hd), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bk, hd), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bk, hd), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, hd), lambda b, i, j: (b, i, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq, hd), jnp.float32),
+        ],
+        operands=[(bh, sq, hd), (bh, sk, hd), (bh, sk, hd)],
+        out_shape=(bh, sq, hd),
+    )
+
+
+#: Analyzer metadata: lint-time instantiations of ``build_specs`` (shapes
+#: chosen to exercise multi-block grids) and the ops<->ref oracle pair.
+KERNEL_META = {
+    "flash_attention": dict(
+        build=build_specs,
+        lint_shapes=dict(bh=2, sq=16, sk=16, hd=8, bq=8, bk=8),
+        grid_dims=("batch_heads", "q_blocks", "k_blocks"),
+        sequential_dim=2,
+    ),
+}
+
+
 def flash_attention_kernel(
     q: jax.Array,  # (BH, Sq, hd)  (batch*heads flattened; KV pre-broadcast)
     k: jax.Array,  # (BH, Sk, hd)
@@ -123,7 +163,8 @@ def flash_attention_kernel(
     bq = min(block_q, sq)
     bk = min(block_k, sk)
     assert sq % bq == 0 and sk % bk == 0, (sq, sk, bq, bk)
-    n_q, n_k = sq // bq, sk // bk
+    sp = build_specs(bh, sq, sk, hd, bq, bk)
+    n_k = sp["grid"][2]
 
     kern = functools.partial(
         _flash_kernel, n_k=n_k, block_q=bq, block_k=bk, causal=causal,
@@ -131,19 +172,11 @@ def flash_attention_kernel(
 
     return pl.pallas_call(
         kern,
-        grid=(bh, n_q, n_k),
-        in_specs=[
-            pl.BlockSpec((1, bq, hd), lambda b, i, j: (b, i, 0)),
-            pl.BlockSpec((1, bk, hd), lambda b, i, j: (b, j, 0)),
-            pl.BlockSpec((1, bk, hd), lambda b, i, j: (b, j, 0)),
-        ],
-        out_specs=pl.BlockSpec((1, bq, hd), lambda b, i, j: (b, i, 0)),
-        out_shape=jax.ShapeDtypeStruct((bh, sq, hd), q.dtype),
-        scratch_shapes=[
-            pltpu.VMEM((bq,), jnp.float32),
-            pltpu.VMEM((bq,), jnp.float32),
-            pltpu.VMEM((bq, hd), jnp.float32),
-        ],
+        grid=sp["grid"],
+        in_specs=sp["in_specs"],
+        out_specs=sp["out_specs"],
+        out_shape=jax.ShapeDtypeStruct(sp["out_shape"], q.dtype),
+        scratch_shapes=sp["scratch_shapes"],
         compiler_params=_plc.CompilerParams(
             dimension_semantics=("parallel", "arbitrary", "arbitrary"),
         ),

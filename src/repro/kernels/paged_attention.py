@@ -121,6 +121,82 @@ def _paged_kernel(
         o_ref[0, 0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
 
 
+def build_specs(b: int, hkv: int, rows: int, hd: int, nb: int, bs: int,
+                n_pages: int, *, quantized: bool) -> dict:
+    """Grid/BlockSpec layout shared by the kernel call *and* the analyzer's
+    kernel lint (``analysis.kernelcheck``).
+
+    The page table and ``cur_len`` are the two scalar-prefetch operands —
+    every K/V (and scale) index_map must consume the prefetched table as an
+    index (``pt[bb, jj]``), which is exactly what the lint's KRN002 check
+    verifies; ``cur_len`` is body-consumed (position masking), so it is not
+    listed in ``prefetch_index_operands``.  ``operands``/``out_shape`` are
+    the wrapper-declared shapes each BlockSpec tiles (same order as
+    ``in_specs``, prefetch excluded).
+    """
+    in_specs = [
+        pl.BlockSpec((1, 1, rows, hd),
+                     lambda bb, hh, jj, pt, cl: (bb, hh, 0, 0)),
+        pl.BlockSpec((1, bs, 1, hd),
+                     lambda bb, hh, jj, pt, cl: (pt[bb, jj], 0, hh, 0)),
+        pl.BlockSpec((1, bs, 1, hd),
+                     lambda bb, hh, jj, pt, cl: (pt[bb, jj], 0, hh, 0)),
+    ]
+    operands = [(b, hkv, rows, hd), (nb, bs, hkv, hd), (nb, bs, hkv, hd)]
+    if quantized:
+        # The scale rides the page's scalar-prefetched index: one (1, 1)
+        # block of the (num_blocks, Hkv) scale pool per grid step.
+        in_specs += [
+            pl.BlockSpec((1, 1),
+                         lambda bb, hh, jj, pt, cl: (pt[bb, jj], hh)),
+            pl.BlockSpec((1, 1),
+                         lambda bb, hh, jj, pt, cl: (pt[bb, jj], hh)),
+        ]
+        operands += [(nb, hkv), (nb, hkv)]
+    return dict(
+        grid=(b, hkv, n_pages),
+        num_scalar_prefetch=2,
+        prefetch_index_operands=(0,),  # page table; cur_len is body-read
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec(
+            (1, 1, rows, hd), lambda bb, hh, jj, pt, cl: (bb, hh, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((rows,), jnp.float32),
+            pltpu.VMEM((rows,), jnp.float32),
+            pltpu.VMEM((rows, hd), jnp.float32),
+        ],
+        operands=operands,
+        out_shape=(b, hkv, rows, hd),
+    )
+
+
+#: Analyzer metadata: lint-time instantiations of ``build_specs`` covering
+#: the plain, multi-token (rows = q_len * g) and quantized variants.
+KERNEL_META = {
+    "paged_attention": dict(
+        build=build_specs,
+        lint_shapes=dict(b=2, hkv=2, rows=4, hd=8, nb=9, bs=8, n_pages=4,
+                         quantized=False),
+        grid_dims=("batch", "kv_heads", "pages"),
+        sequential_dim=2,
+    ),
+    "paged_attention_multi": dict(
+        build=build_specs,
+        lint_shapes=dict(b=2, hkv=2, rows=12, hd=8, nb=9, bs=8, n_pages=4,
+                         quantized=False),
+        grid_dims=("batch", "kv_heads", "pages"),
+        sequential_dim=2,
+    ),
+    "paged_attention_quant": dict(
+        build=build_specs,
+        lint_shapes=dict(b=2, hkv=2, rows=4, hd=8, nb=9, bs=8, n_pages=4,
+                         quantized=True),
+        grid_dims=("batch", "kv_heads", "pages"),
+        sequential_dim=2,
+    ),
+}
+
+
 def _paged_call(
     qr: jax.Array,  # (B, Hkv, q_len * g, hd)
     k_pool: jax.Array,
@@ -146,44 +222,24 @@ def _paged_call(
         group=group, window=window, softcap=softcap, scale=scale,
         quantized=quantized)
 
-    in_specs = [
-        pl.BlockSpec((1, 1, rows, hd),
-                     lambda bb, hh, jj, pt, cl: (bb, hh, 0, 0)),
-        pl.BlockSpec((1, bs, 1, hd),
-                     lambda bb, hh, jj, pt, cl: (pt[bb, jj], 0, hh, 0)),
-        pl.BlockSpec((1, bs, 1, hd),
-                     lambda bb, hh, jj, pt, cl: (pt[bb, jj], 0, hh, 0)),
-    ]
+    sp = build_specs(b, hkv, rows, hd, nb, bs, n_pages, quantized=quantized)
     inputs = [page_table.astype(jnp.int32), cur_len.astype(jnp.int32), qr,
               k_pool, v_pool]
     if quantized:
-        # The scale rides the page's scalar-prefetched index: one (1, 1)
-        # block of the (num_blocks, Hkv) scale pool per grid step.
-        in_specs += [
-            pl.BlockSpec((1, 1),
-                         lambda bb, hh, jj, pt, cl: (pt[bb, jj], hh)),
-            pl.BlockSpec((1, 1),
-                         lambda bb, hh, jj, pt, cl: (pt[bb, jj], hh)),
-        ]
         inputs += [k_scale, v_scale]
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=2,
-        grid=(b, hkv, n_pages),
-        in_specs=in_specs,
-        out_specs=pl.BlockSpec(
-            (1, 1, rows, hd), lambda bb, hh, jj, pt, cl: (bb, hh, 0, 0)),
-        scratch_shapes=[
-            pltpu.VMEM((rows,), jnp.float32),
-            pltpu.VMEM((rows,), jnp.float32),
-            pltpu.VMEM((rows, hd), jnp.float32),
-        ],
+        num_scalar_prefetch=sp["num_scalar_prefetch"],
+        grid=sp["grid"],
+        in_specs=sp["in_specs"],
+        out_specs=sp["out_specs"],
+        scratch_shapes=sp["scratch_shapes"],
     )
 
     return pl.pallas_call(
         kern,
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((b, hkv, rows, hd), qr.dtype),
+        out_shape=jax.ShapeDtypeStruct(sp["out_shape"], qr.dtype),
         compiler_params=_plc.CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),

@@ -55,6 +55,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis.budget import tick_path, transfer_budget
 from repro.kernels import quant
 from repro.models import transformer as T
 from repro.models.transformer import ModelConfig
@@ -83,6 +84,18 @@ def _lru_jit(cache: "collections.OrderedDict", key, make, *,
     else:
         cache.move_to_end(key)
     return fn
+
+
+class PoolInvariantError(AssertionError):
+    """A pool invariant does not hold; ``rule`` is the analyzer rule ID
+    (POOL001 refcount conservation, POOL002 aliasing/table-ownership,
+    POOL003 free-list corruption, POOL005 quant scale layout).  Raised by
+    ``check_invariants`` and by the ``REPRO_SANITIZE=1`` runtime sanitizer
+    (``analysis.poolcheck``) — one predicate set for both."""
+
+    def __init__(self, rule: str, msg: str):
+        super().__init__(f"{rule}: {msg}")
+        self.rule = rule
 
 
 class BlockAllocator:
@@ -163,6 +176,62 @@ class BlockAllocator:
                 self._free.append(p)
             else:
                 self._ref[p] -= 1
+
+    def check_invariants(self, holders=None, registry_use=None) -> None:
+        """Raise :class:`PoolInvariantError` unless the allocator is sound.
+
+        Structural checks (always): the free list holds each page once,
+        never the trash page, never a live-referenced page, and together
+        with the live refs accounts for every usable page (POOL003); every
+        live refcount is >= 1 (POOL001).
+
+        Conservation (when ``holders`` is given): ``holders`` is the
+        per-slot owned-page lists and ``registry_use`` the prefix
+        registry's distinct retained blocks (one retention ref each); each
+        page's refcount must equal its occurrences across holders plus its
+        registry retention — refcount sum == mapped pages + registry refs.
+        """
+        free = self._free
+        if len(set(free)) != len(free):
+            raise PoolInvariantError(
+                "POOL003", f"duplicate pages on the free list: {free}")
+        bad = [p for p in free if not 1 <= p < self.num_blocks]
+        if bad:
+            raise PoolInvariantError(
+                "POOL003", f"out-of-range/trash pages on the free list: "
+                f"{bad}")
+        overlap = set(free) & self._ref.keys()
+        if overlap:
+            raise PoolInvariantError(
+                "POOL003", f"pages both free and referenced: "
+                f"{sorted(overlap)}")
+        if TRASH_PAGE in self._ref:
+            raise PoolInvariantError(
+                "POOL003", "the trash page is refcounted (it is never "
+                "allocated)")
+        if len(free) + len(self._ref) != self.capacity:
+            raise PoolInvariantError(
+                "POOL003", f"{self.capacity - len(free) - len(self._ref)} "
+                "pages leaked (neither free nor referenced)")
+        low = {p: r for p, r in self._ref.items() if r < 1}
+        if low:
+            raise PoolInvariantError(
+                "POOL001", f"non-positive refcounts: {low}")
+        if holders is None:
+            return
+        expect = collections.Counter(p for h in holders for p in h)
+        if registry_use is not None:
+            expect.update(dict.fromkeys(registry_use, 1))
+        for p in self._ref.keys() | expect.keys():
+            if self._ref.get(p, 0) != expect.get(p, 0):
+                raise PoolInvariantError(
+                    "POOL001", f"page {p}: refcount {self._ref.get(p, 0)} "
+                    f"!= {expect.get(p, 0)} holders (slot mappings + "
+                    "registry retention)")
+        if self.total_refs != sum(expect.values()):
+            raise PoolInvariantError(
+                "POOL001", f"refcount sum {self.total_refs} != "
+                f"{sum(expect.values())} mapped pages + registry refs")
 
 
 class PrefixRegistry:
@@ -485,6 +554,13 @@ class PagedKVCache:
         self._gather_jit: collections.OrderedDict = collections.OrderedDict()
         self._load_jit: collections.OrderedDict = collections.OrderedDict()
         self._copy_jit: Any = None
+        # Opt-in runtime sanitizer: re-check the full invariant set after
+        # every mutating method (analysis.poolcheck shares the predicates
+        # with the static audit).  Counted so tests can assert it ran.
+        self.sanitize_checks = 0
+        if os.environ.get("REPRO_SANITIZE"):
+            from repro.analysis.poolcheck import attach_sanitizer
+            attach_sanitizer(self)
 
     # -- accounting ------------------------------------------------------------
 
@@ -583,6 +659,7 @@ class PagedKVCache:
         self.page_table[slot, :] = TRASH_PAGE
         self.page_table[slot, : len(pages)] = pages
 
+    @tick_path(allowed_fetches=0)
     def ensure_write(self, slot: int, pos: int) -> bool:
         """Make position ``pos`` writable for ``slot`` (the lazy page fault
         as ``cur`` advances).  If the target page is shared, fork it first
@@ -606,6 +683,7 @@ class PagedKVCache:
             self.peak_pages_in_use, self.pages_in_use)
         return True
 
+    @tick_path(allowed_fetches=0)
     def truncate(self, slot: int, length: int) -> None:
         """Shrink ``slot``'s page table to cover exactly ``length`` rows —
         the speculative-decode rollback: pages allocated for draft positions
@@ -632,8 +710,75 @@ class PagedKVCache:
             self._owned[slot] = []
         self.page_table[slot, :] = TRASH_PAGE
 
+    @tick_path(allowed_fetches=0)
     def device_page_table(self) -> jax.Array:
         return jnp.asarray(self.page_table)
+
+    def check_invariants(self) -> None:
+        """Raise :class:`PoolInvariantError` unless the whole pool is sound:
+        allocator conservation against the slots' owned pages + registry
+        retentions (POOL001/POOL003 via ``BlockAllocator.check_invariants``),
+        page-table rows consistent with ownership and free of cross-slot
+        aliasing, trash never mapped as real data (POOL002), and quant
+        scale leaves traveling with their pages (POOL005)."""
+        use = self.registry._block_use
+        self.allocator.check_invariants(self._owned, use)
+        for slot, owned in enumerate(self._owned):
+            if TRASH_PAGE in owned:
+                raise PoolInvariantError(
+                    "POOL002", f"slot {slot} owns the trash page (trash "
+                    "writes would be read back as data)")
+            row = self.page_table[slot]
+            n = len(owned)
+            tail = row[n:]
+            if tail.size and not (tail == TRASH_PAGE).all():
+                raise PoolInvariantError(
+                    "POOL002", f"slot {slot} table maps pages beyond its "
+                    f"{n} owned ({row.tolist()})")
+            head = row[:n]
+            # A row entry is either this slot's page at that index or
+            # trash (shielded during admission) — anything else aliases
+            # another slot's data through this table.
+            bad = [i for i in range(n)
+                   if head[i] != TRASH_PAGE and head[i] != owned[i]]
+            if bad:
+                raise PoolInvariantError(
+                    "POOL002", f"slot {slot} table rows {bad} alias pages "
+                    f"it does not own there (table {head.tolist()}, owned "
+                    f"{owned})")
+        for b in use:
+            if b == TRASH_PAGE:
+                raise PoolInvariantError(
+                    "POOL002", "the prefix registry retains the trash page")
+            if self.allocator.refcount(b) < 1:
+                raise PoolInvariantError(
+                    "POOL001", f"registry retains unallocated page {b}")
+        if quant.is_quantized(self.kv_dtype):
+            st = quant.storage_dtype(self.kv_dtype)
+            for name, c in self.pools["blocks"].items():
+                for key in ("k", "v"):
+                    leaf = c.get(key)
+                    if leaf is None or leaf.ndim < 2 \
+                            or leaf.shape[1] != self.num_blocks:
+                        continue  # per-slot state, not a page pool
+                    if leaf.dtype != st:
+                        raise PoolInvariantError(
+                            "POOL005", f"{name}.{key}: pool dtype "
+                            f"{leaf.dtype} != declared storage {st}")
+                    skey = f"{key}_scale"
+                    sc = c.get(skey)
+                    if sc is None:
+                        raise PoolInvariantError(
+                            "POOL005", f"{name}.{key}: quantized pool leaf "
+                            "has no scale leaf (scales must travel with "
+                            "their page)")
+                    if sc.dtype != jnp.float32 \
+                            or sc.shape[:2] != leaf.shape[:2]:
+                        raise PoolInvariantError(
+                            "POOL005", f"{name}.{skey}: scale layout "
+                            f"{sc.shape}/{sc.dtype} does not ride the "
+                            f"page axis of {leaf.shape} as f32")
+        self.sanitize_checks += 1
 
     # -- prefix registry (the SYNC transfer, staged once) ----------------------
 
@@ -866,6 +1011,7 @@ class PagedKVCache:
 
     # -- page scatter / gather / copy (admission, evict, readmit, COW) ---------
 
+    @transfer_budget(d2h_arrays=0, d2h_outputs=())
     def _make_scatter(self, n_pages: int):
         bs = self.block_size
         kv_dtype = self.kv_dtype
@@ -902,6 +1048,7 @@ class PagedKVCache:
 
         return jax.jit(fn)
 
+    @transfer_budget(d2h_arrays=0, d2h_outputs=())
     def _make_gather(self, n_pages: int):
         bs = self.block_size
 
@@ -931,6 +1078,7 @@ class PagedKVCache:
 
         return jax.jit(fn)
 
+    @transfer_budget(d2h_arrays=0, d2h_outputs=())
     def _make_load(self, n_pages: int):
         bs = self.block_size
 

@@ -42,6 +42,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis.budget import transfer_budget
 from repro.models import transformer as T
 from repro.models.transformer import ModelConfig
 from repro.runtime import serving
@@ -170,12 +171,16 @@ class ServableModel:
 
     # -- decode ----------------------------------------------------------------
 
+    @transfer_budget(d2h_arrays=1, d2h_outputs=(0,), d2h_bytes_per_slot=4)
     def decode_fn(self, *, paged: bool):
         """The jitted batched decode step with on-device sampling fused in.
 
         Signature matches the engine's tick call: greedy takes
         ``(params, tokens, caches[, page_table], cur_len)``, temperature
         appends ``(uids, steps)`` for the per-slot key fold.
+
+        Transfer budget: the tick fetches output 0 — the (B,) int32 of
+        sampled tokens — and nothing else (one int32 per slot per tick).
         """
         cfg = self.cfg
         scfg = self.scfg
@@ -230,6 +235,11 @@ class TransformerServable(ServableModel):
 
     kind = "transformer"
 
+    # A spec tick fetches (emit, n_accept): (B, k+1) + (B,) int32 —
+    # 4 * (spec_k + 2) bytes per slot, still O(tokens) not O(vocab).
+    @transfer_budget(
+        d2h_arrays=2, d2h_outputs=(0, 1),
+        d2h_bytes_per_slot=lambda scfg: 4 * (scfg.spec_k + 2))
     def make_verifier(self, *, paged: bool):
         from repro.runtime import spec as _spec
         return _spec.make_verifier(

@@ -113,6 +113,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis.budget import host_fetch, tick_path, transfer_budget
 from repro.core import rmetric
 from repro.kernels import quant
 from repro.models import transformer as T
@@ -328,6 +329,7 @@ class ServingEngine:
 
     # -- streamed prefill -------------------------------------------------------
 
+    @transfer_budget(d2h_arrays=0, d2h_outputs=())
     def _prefill_chunk_fn(self, chunk_len: int, first: bool, pos0: int):
         """jitted: process one prompt chunk against the running cache.
 
@@ -371,6 +373,7 @@ class ServingEngine:
 
         return _lru_jit(self._chunk_jit, key, make, cap=self._chunk_jit_cap)
 
+    @transfer_budget(d2h_arrays=0, d2h_outputs=())
     def _fused_chunk_fn(self, chunk_len: int, pos0: int):
         """jitted: one prompt chunk whose K/V projections are written
         directly into the pool's blocks through the page table (prefill →
@@ -819,14 +822,23 @@ class StreamedBatchEngine:
         depend on batch composition."""
         return slot_key(uid, step)
 
+    @tick_path(allowed_fetches=1)
     def _sample(self, logits_row: jax.Array, uid: int, step: int) -> int:
-        """Per-request sampling: greedy, or temperature via the slot key."""
-        if self.scfg.temperature > 0.0:
-            return int(jax.random.categorical(
-                self._slot_key(uid, step),
-                logits_row / self.scfg.temperature))
-        return int(jnp.argmax(logits_row, axis=-1))
+        """Per-request sampling: greedy, or temperature via the slot key.
 
+        The pick is reduced on device, then fetched once via the declared
+        ``host_fetch`` — ``int()`` straight on the device scalar was the
+        hidden-sync shape STR001 exists to catch.
+        """
+        if self.scfg.temperature > 0.0:
+            pick = jax.random.categorical(
+                self._slot_key(uid, step),
+                logits_row / self.scfg.temperature)
+        else:
+            pick = jnp.argmax(logits_row, axis=-1)
+        return int(host_fetch(pick))
+
+    @tick_path(allowed_fetches=0)
     def _admit(self, req: Request, slot: _Slot) -> None:
         """Chunked prefill of ``req`` interleaved with batched decode steps,
         then scatter its cache into ``slot``'s rows (contiguous) or pages
@@ -997,6 +1009,7 @@ class StreamedBatchEngine:
             align_tokens=chunk, count=False)
         return n, blocks, self.kv.last_lookup_probed
 
+    @tick_path(allowed_fetches=0)
     def _admission_fits(self, req: Request) -> bool:
         """Admission gate: can ``req`` take a slot right now?  Counts pages
         through the first decode write (len + 1), credits a shared-prefix
@@ -1014,6 +1027,7 @@ class StreamedBatchEngine:
                 return False
         return False
 
+    @tick_path(allowed_fetches=0)
     def _decode_tick(self) -> None:
         """One decode tick: speculative (draft + batched verify) when
         ``spec_decode`` is on, else one plain batched single-token step."""
@@ -1021,6 +1035,7 @@ class StreamedBatchEngine:
             return self._spec_tick()
         return self._plain_tick()
 
+    @tick_path(allowed_fetches=0)
     def _fault_base_positions(self) -> None:
         """Lazy page fault: make each active slot's write position
         resident, preempting the youngest slots if the pool runs dry
@@ -1038,6 +1053,7 @@ class StreamedBatchEngine:
                     self.preemptions += 1
                     break
 
+    @tick_path(allowed_fetches=1)
     def _plain_tick(self) -> None:
         """One batched decode step for all slots (inactive rows are padding).
 
@@ -1074,7 +1090,7 @@ class StreamedBatchEngine:
         else:
             self.caches = new_caches
         self.decode_steps += 1
-        picks = np.asarray(nxt)  # (B,) int32 — the tick's only D2H
+        picks = host_fetch(nxt)  # (B,) int32 — the tick's only D2H
         for s in act:
             s.cur += 1
             s.pending = int(picks[s.index])
@@ -1091,6 +1107,7 @@ class StreamedBatchEngine:
                           s.max_new - len(s.emitted) - 1,
                           self.scfg.max_seq - 1 - s.cur))
 
+    @tick_path(allowed_fetches=2)
     def _spec_tick(self) -> None:
         """One speculate/verify step: the drafter proposes up to ``spec_k``
         tokens per slot, one jitted multi-token target step scores all
@@ -1165,8 +1182,8 @@ class StreamedBatchEngine:
             self.caches = new_caches
         self.decode_steps += 1
         self.spec_ticks += 1
-        emit = np.asarray(emit)  # (B, k+1) + (B,): the tick's only D2H
-        n_accept = np.asarray(n_accept)
+        emit = host_fetch(emit)  # (B, k+1) + (B,): the tick's only D2H
+        n_accept = host_fetch(n_accept)
         for s in act:
             n = int(n_accept[s.index])
             self.spec_accepted += n
@@ -1183,6 +1200,7 @@ class StreamedBatchEngine:
 
     # -- scheduling loop -------------------------------------------------------
 
+    @tick_path(allowed_fetches=0)
     def step(self) -> None:
         """One scheduling quantum: readmit page-pressure victims, admit
         queued requests into free slots (chunked prefill, interleaved), else

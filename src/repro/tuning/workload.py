@@ -299,3 +299,25 @@ def classify_workload(
             and 0.0 < desc.shared_prefix_fraction < SHARE_DOMINANT):
         return dep.Category.FALSE_DEPENDENT
     return cat
+
+
+def crosscheck_category(
+    derived: dep.Category, desc: WorkloadDescriptor, *,
+    prefill_chunk: int, prefix_staged: bool = False,
+    spec_decode: bool = False, spec_k: int = 0, arch: str = "transformer",
+) -> tuple[dep.Category, bool]:
+    """Analyzer hook (rule STR005): compare a category *derived from traced
+    jaxprs* (``core.dependency.step_footprint`` + ``unroll_stream`` over
+    the engine's real steps) against this classifier's prediction for the
+    same descriptor.  Returns ``(expected, match)``.
+
+    A mismatch means the hand-modeled graphs in :func:`to_task_graph` no
+    longer describe what the engine actually executes (e.g. a decode step
+    stopped carrying the KV pages, or a "fused" prefill still stages a
+    contiguous slab) — the classifier's category pins are a consequence of
+    the traced code, not a hand-maintained assertion.
+    """
+    expected = classify_workload(
+        desc, prefill_chunk=prefill_chunk, prefix_staged=prefix_staged,
+        spec_decode=spec_decode, spec_k=spec_k, arch=arch)
+    return expected, expected is derived

@@ -1,0 +1,5 @@
+"""Known-bad fixtures for the stream-safety analyzer.
+
+Each module plants exactly one defect class; ``tests/test_analysis.py``
+asserts the analyzer reports exactly that rule ID — no more, no less.
+"""

@@ -1,0 +1,33 @@
+"""Fixture: a mis-declared Pallas layout (KRN001 only).
+
+The K spec's block doesn't tile the declared operand and its index map
+returns one coordinate too many; the scalar-prefetch operand *is*
+consumed, so KRN002 stays quiet.
+"""
+
+from jax.experimental import pallas as pl
+
+
+def build_specs() -> dict:
+    return dict(
+        grid=(2, 2),
+        num_scalar_prefetch=1,
+        prefetch_index_operands=(0,),
+        in_specs=[
+            pl.BlockSpec((8, 8), lambda i, j, pt: (pt[i], j, 0)),
+        ],
+        out_specs=pl.BlockSpec((8, 8), lambda i, j, pt: (i, j)),
+        scratch_shapes=[],
+        operands=[(8, 12)],
+        out_shape=(16, 16),
+    )
+
+
+KERNEL_META = {
+    "bad_kernel": dict(
+        build=build_specs,
+        lint_shapes={},
+        grid_dims=("rows", "cols"),
+        sequential_dim=1,
+    ),
+}

@@ -1,0 +1,22 @@
+"""Fixture: a step whose fetched outputs exceed its declared transfer
+budget (STR002 only).
+
+The builder declares one fetched array at 4 bytes/slot but the tick
+fetches two of the step's outputs — a (B, 8) f32 block among them — so
+both the array-count and bytes-per-slot checks trip.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from repro.analysis.budget import transfer_budget
+
+
+@transfer_budget(d2h_arrays=1, d2h_outputs=(0, 1), d2h_bytes_per_slot=4)
+def build_step():
+
+    @jax.jit
+    def step(x):
+        return x * 2.0, x + 1.0, jnp.sum(x)
+
+    return step

@@ -1,0 +1,17 @@
+"""Fixture: a tick-path method with a hidden host sync (STR001 only).
+
+``int()`` straight on a device scalar blocks the dispatch stream — the
+exact defect shape ``_sample`` had before it switched to a declared
+``host_fetch``.
+"""
+
+from repro.analysis.budget import tick_path
+
+
+class BrokenEngine:
+
+    @tick_path(allowed_fetches=1)
+    def tick(self):
+        out, state = self._step_jit(None)
+        self.state = state
+        return int(out.sum())

@@ -1,0 +1,13 @@
+"""Fixture: a pool whose refcounts stop conserving (POOL001 only).
+
+``leak`` bumps an owned page's refcount without any holder backing it —
+the allocator thinks the page is shared, so it will never return to the
+free list: a permanent capacity leak.
+"""
+
+
+def leak(kv) -> int:
+    """Corrupt ``kv`` in place; returns the leaked page."""
+    page = kv._owned[0][0]
+    kv.allocator._ref[page] += 1
+    return page

@@ -67,8 +67,10 @@ class TestBlockAllocator:
             in_use = sum(len(g) for g in held)
             assert alloc.used_count == in_use
             assert alloc.free_count == alloc.capacity - in_use
+            alloc.check_invariants(held)  # POOL001/POOL003 audit
         for grant in held:
             alloc.free(grant)
+        alloc.check_invariants([])
         assert alloc.free_count == alloc.capacity  # full reclaim
         assert alloc.used_count == 0
         assert seen_total <= set(range(1, alloc.num_blocks))
@@ -102,8 +104,10 @@ class TestBlockAllocator:
                 1 for c in counts.values() if c > 1)
             for p, c in counts.items():
                 assert alloc.refcount(p) == c
+            alloc.check_invariants(held)  # POOL001/POOL003 audit
         for grant in held:
             alloc.free(grant)
+        alloc.check_invariants([])
         assert alloc.free_count == alloc.capacity  # full reclaim
         assert alloc.used_count == 0 and alloc.total_refs == 0
 
