@@ -4,7 +4,7 @@
 # stream-safety analyzer (required in CI alongside tier-1).
 PYTHONPATH := src
 
-.PHONY: test test-slow lint-streams bench tune
+.PHONY: test test-slow lint-streams bench tune trace
 
 test:  ## tier-1 gate (pytest.ini already excludes -m slow)
 	PYTHONPATH=$(PYTHONPATH) python -m pytest -x -q -m "not slow"
@@ -17,6 +17,12 @@ lint-streams:  ## stream-safety analyzer: sync audit, kernel lint, pool audit
 
 bench:  ## paper-figure benchmarks (CSV to stdout)
 	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.run
+
+trace:  ## traced serving smoke: writes trace.json (open at ui.perfetto.dev)
+	PYTHONPATH=$(PYTHONPATH) JAX_PLATFORMS=cpu python -m repro.launch.serve \
+	    --arch qwen3-4b --requests 4 --prompt-len 64 --new-tokens 8 \
+	    --prefill-chunk 16 --max-batch 2 --paged \
+	    --trace trace.json --metrics
 
 tune:  ## capped-budget smoke tune on CPU; plan persists to .tuning-cache/
 	PYTHONPATH=$(PYTHONPATH) JAX_PLATFORMS=cpu python -m repro.launch.serve \

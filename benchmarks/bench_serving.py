@@ -44,6 +44,16 @@ plain decode steps, and decode tokens/s for both.  The acceptance bar:
 token parity (always), strictly fewer decode steps, and a tokens/s win
 (wall-clock, asserted only with ``strict``).
 
+The observability section (``run_obs``) is PR 9's acceptance harness for
+the telemetry layer: every serving mode (contiguous, paged, paged+sharing,
+paged+spec, paged+int8) runs the workload twice — tracing off, then on —
+asserting bitwise token parity between the two, then reports the
+*measured* overlap efficiency reconstructed from the trace against the
+R-gate's analytic prediction, TTFT/ITL p50/p99 from the metrics
+histograms, D2H bytes per tick, and the traced/untraced tokens/s ratio
+(the overhead guard; asserted >= 0.95 only with ``strict``).  ``__main__``
+writes it as ``BENCH_obs.json``.
+
 Besides the CSV lines on stdout, ``__main__`` writes the same metrics as
 machine-readable JSON (``BENCH_serving.json`` in the working directory, or
 the path given as first argv): one record per metric with its parsed value
@@ -62,6 +72,7 @@ import numpy as np
 
 import repro.configs as C
 from repro.models import transformer as T
+from repro.obs import MetricsRegistry, Tracer, overlap_report
 from repro.runtime.serving import ServeConfig, ServingEngine, StreamedBatchEngine
 
 ARCH = "qwen3-4b"
@@ -373,6 +384,182 @@ def run_spec(
     ]
 
 
+#: Minimum traced/untraced tokens-per-second ratio the overhead guard
+#: accepts (tracing is one clock read + one tuple append per span).
+TRACE_OVERHEAD_MIN = 0.95
+
+#: The serving modes the observability A/B sweeps: ServeConfig extras per
+#: mode; prompts come from ``_obs_prompts``.
+OBS_MODES = (
+    ("contiguous", {}),
+    ("paged", {"paged": True}),
+    ("paged_sharing", {"paged": True, "prefix_sharing": True}),
+    ("paged_spec", {"paged": True, "spec_decode": True, "spec_k": 4}),
+    ("paged_int8", {"paged": True, "kv_dtype": "int8"}),
+)
+
+
+def _obs_prompts(cfg, mode: str, n: int, length: int, block_size: int):
+    """Workload matched to the mode: a page-aligned shared system prefix
+    for the sharing mode, a repeated (lookup-friendly) pattern for the
+    speculative mode, i.i.d. prompts elsewhere."""
+    if mode == "paged_sharing":
+        sys_len = max(block_size,
+                      (length // 2) // block_size * block_size)
+        system = np.asarray(jax.random.randint(
+            jax.random.PRNGKey(300), (sys_len,), 0, cfg.vocab_size))
+        return [np.concatenate([system, p])
+                for p in _prompts(cfg, n, length - sys_len)]
+    if mode == "paged_spec":
+        pattern = np.asarray(jax.random.randint(
+            jax.random.PRNGKey(301), (8,), 0, cfg.vocab_size))
+        prompts = []
+        for i in range(n):
+            p = np.tile(pattern, -(-length // 8))[:length].astype(np.int32)
+            p[-1] = (p[-1] + i) % cfg.vocab_size
+            prompts.append(p)
+        return prompts
+    return _prompts(cfg, n, length)
+
+
+def run_obs(
+    cfg=None, params=None, *, n_requests: int = 6, prompt_len: int = 64,
+    new_tokens: int = 16, max_batch: int = 4, block_size: int = 16,
+    prefill_chunk: int = 16, strict: bool = False,
+    trace_path: str | None = None,
+    modes=OBS_MODES,
+) -> tuple[list[str], list[dict]]:
+    """Observability A/B across the serving modes (see module docstring).
+
+    Returns the CSV lines plus one structured record per mode for
+    ``BENCH_obs.json``.  With ``trace_path`` the paged mode's Chrome trace
+    is written there (the nightly artifact).  ``strict`` asserts the
+    overhead guard (wall-clock — CI smoke leaves it off and the slow-tier
+    test turns it on)."""
+    from repro.tuning.workload import WorkloadDescriptor, classify_workload
+    if cfg is None:
+        cfg = C.get_smoke_config(ARCH)
+        params = T.init_params(cfg, jax.random.PRNGKey(0))
+    max_seq = -(-(prompt_len + new_tokens) // block_size) * block_size
+    lines: list[str] = []
+    records: list[dict] = []
+    for mode, extra in modes:
+        prompts = _obs_prompts(cfg, mode, n_requests, prompt_len,
+                               block_size)
+        scfg_kwargs = dict(
+            max_seq=max_seq, prefill_chunk=prefill_chunk,
+            max_new_tokens=new_tokens, max_batch=max_batch,
+            block_size=block_size, **extra)
+        runs = {}
+        for traced in (False, True):
+            tr = Tracer() if traced else None
+            eng = StreamedBatchEngine(
+                cfg, params, ServeConfig(**scfg_kwargs), tracer=tr)
+            eng.submit(prompts[0])
+            eng.run()  # warm every compile out of the timed window
+            eng.metrics = MetricsRegistry()  # drop warmup telemetry
+            if tr is not None:
+                tr.clear()
+            t0 = time.perf_counter()
+            uids = [eng.submit(p) for p in prompts]
+            out = eng.run()
+            dt = time.perf_counter() - t0
+            runs[traced] = dict(
+                eng=eng, tr=tr, dt=dt, out=[out[u] for u in uids],
+                tokens=sum(len(out[u]) for u in uids))
+        off, on = runs[False], runs[True]
+        # The tracer must be invisible to the tokens: bitwise parity
+        # between the traced and untraced runs, every mode (int8 included
+        # — both runs quantize identically).
+        for a, b in zip(off["out"], on["out"]):
+            np.testing.assert_array_equal(a, b)
+        tps_off = off["tokens"] / off["dt"]
+        tps_on = on["tokens"] / on["dt"]
+        ratio = tps_on / tps_off
+        if strict:
+            assert ratio >= TRACE_OVERHEAD_MIN, (
+                f"tracing cost more than {1 - TRACE_OVERHEAD_MIN:.0%} "
+                f"tokens/s in mode {mode}: {tps_on:.1f} vs {tps_off:.1f}")
+        # Measured overlap from the recorded timeline vs the R gate's
+        # prediction from freshly probed stage times, tagged with the
+        # paper category the tuner files this workload under.
+        eng = on["eng"]
+        desc = WorkloadDescriptor.from_prompts(
+            prompts, max_new_tokens=new_tokens)
+        category = classify_workload(
+            desc, prefill_chunk=prefill_chunk,
+            prefix_staged=bool(extra.get("prefix_sharing")),
+            spec_decode=bool(extra.get("spec_decode")),
+            spec_k=int(extra.get("spec_k", 0))).value
+        spans = on["tr"].spans()
+        rep = overlap_report(spans,
+                             stage_times=eng.measure_stage_times(prompt_len),
+                             category=category)
+        meas, pred = rep["measured"], rep["predicted"]
+        m = eng.metrics
+        ttft = m.histogram("latency.ttft_s").snapshot()
+        itl = m.histogram("latency.itl_s").snapshot()
+        d2h = m.histogram("transfer.d2h_bytes_per_tick").snapshot()
+        live_str002 = m.value("analysis.str002_live", 0)
+        assert live_str002 == 0, (
+            f"runtime transfer accounting flagged {live_str002} "
+            f"over-budget ticks in mode {mode} — a step is fetching more "
+            "than its declared @transfer_budget")
+        if trace_path and mode == "paged":
+            on["tr"].to_chrome(trace_path)
+        records.append({
+            "mode": mode,
+            "category": category,
+            "overlap": {
+                "measured": meas["efficiency"],
+                "predicted": pred["efficiency"],
+                "gap": rep["gap"],
+                "decision": pred["decision"],
+                "n_streams": pred["n_streams"],
+                "hidden_ms": meas["hidden_s"] * 1e3,
+                "total_ms": meas["total_s"] * 1e3,
+            },
+            "ttft_ms": {"p50": ttft["p50"] * 1e3,
+                        "p99": ttft["p99"] * 1e3,
+                        "mean": ttft["mean"] * 1e3},
+            "itl_ms": {"p50": itl["p50"] * 1e3, "p99": itl["p99"] * 1e3},
+            "tokens_per_s": {"untraced": tps_off, "traced": tps_on,
+                             "ratio": ratio},
+            "d2h_bytes_per_tick": {"mean": d2h["mean"], "max": d2h["max"]},
+            "spans": len(spans),
+            "dropped_spans": on["tr"].dropped,
+            "str002_live": live_str002,
+        })
+        lines += [
+            f"obs_overlap_{mode},{meas['efficiency']:.3f},"
+            f"measured transfer-hidden fraction vs "
+            f"{pred['efficiency']:.3f} R-gate prediction "
+            f"({pred['decision']}, n={pred['n_streams']}, {category})",
+            f"obs_ttft_ms_p99_{mode},{ttft['p99'] * 1e3:.2f},"
+            f"p50 {ttft['p50'] * 1e3:.2f}ms over {ttft['count']} "
+            f"admissions",
+            f"obs_itl_ms_p99_{mode},{itl['p99'] * 1e3:.2f},"
+            f"p50 {itl['p50'] * 1e3:.2f}ms per emitted token",
+            f"obs_trace_overhead_{mode},{ratio:.3f},"
+            f"traced/untraced tokens/s ({tps_on:.1f} vs {tps_off:.1f}; "
+            f"bitwise parity held, {len(spans)} spans)",
+        ]
+    return lines, records
+
+
+def write_obs_json(records: list[dict],
+                   path: str = "BENCH_obs.json") -> str:
+    """Atomic machine-readable dump of an observability A/B run."""
+    payload = {"bench": "obs", "arch": ARCH, "schema": 1,
+               "modes": records}
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(payload, f, indent=1, sort_keys=True)
+        f.write("\n")
+    os.replace(tmp, path)
+    return path
+
+
 def run() -> list[str]:
     cfg = C.get_smoke_config(ARCH)
     params = T.init_params(cfg, jax.random.PRNGKey(0))
@@ -394,9 +581,9 @@ def run() -> list[str]:
     eng = StreamedBatchEngine(cfg, params, scfg)
     eng.submit(prompts[0])  # warm the batched decode/scatter compiles
     eng.run()
-    eng.decode_steps = 0  # count only the timed run's batched steps
-    eng.admit_seconds = 0.0
-    eng.admissions = 0
+    eng.metrics = MetricsRegistry()  # drop warmup telemetry wholesale
+    # (zeroes every legacy counter *and* the latency histograms backing
+    # the admit p50/p99 lines below)
     t0 = time.perf_counter()
     uids = [eng.submit(p) for p in prompts]
     cb_out = eng.run()
@@ -440,6 +627,7 @@ def run() -> list[str]:
 
     seq_tps = total_tokens / t_seq
     cb_tps = total_tokens / t_cb
+    ttft = eng.metrics.histogram("latency.ttft_s").snapshot()
     # strict=False: the aggregated report must not be aborted by wall-clock
     # jitter on a loaded host; the CSV line reports the ratio either way
     # (the deterministic fewer-decode-steps assert still holds), and a
@@ -458,6 +646,12 @@ def run() -> list[str]:
         f"serving_admit_ms,"
         f"{eng.admit_seconds / max(1, eng.admissions) * 1e3:.2f},"
         f"mean queue-pop -> first-token latency ({MAX_BATCH} slots)",
+        f"serving_admit_ms_p50,{ttft['p50'] * 1e3:.2f},"
+        f"median queue-pop -> first-token latency "
+        f"({ttft['count']} admissions)",
+        f"serving_admit_ms_p99,{ttft['p99'] * 1e3:.2f},"
+        f"p99 queue-pop -> first-token latency "
+        f"(max {ttft['max'] * 1e3:.2f}ms)",
         f"serving_paged_tokens_per_s,{total_tokens / t_paged:.1f},"
         f"paged {pscfg.max_batch} slots block={BLOCK_SIZE} "
         f"({peng.decode_steps} steps)",
@@ -510,3 +704,9 @@ if __name__ == "__main__":
     out_path = write_json(
         bench_lines, *(sys.argv[1:2] or ["BENCH_serving.json"]))
     print(f"# wrote {out_path}")
+    obs_lines, obs_records = run_obs()
+    for line in obs_lines:
+        print(line)
+    obs_path = write_obs_json(
+        obs_records, *(sys.argv[2:3] or ["BENCH_obs.json"]))
+    print(f"# wrote {obs_path}")

@@ -88,6 +88,15 @@ def main() -> None:
                     help="path: persist the prefix registry across runs "
                          "(restored at engine construction, saved after "
                          "the run; needs --prefix-sharing)")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="record per-tick spans and write a Chrome/Perfetto "
+                         "trace.json here after the run (open it at "
+                         "ui.perfetto.dev); also prints the measured "
+                         "overlap efficiency vs the R-gate prediction")
+    ap.add_argument("--metrics", action="store_true",
+                    help="print engine.metrics_snapshot() as JSON after "
+                         "the run (counters, latency histograms, pool "
+                         "stats)")
     args = ap.parse_args()
     if args.prefix_sharing and not args.paged:
         ap.error("--prefix-sharing requires --paged")
@@ -137,6 +146,9 @@ def main() -> None:
             jax.random.PRNGKey(2), (b, cfg.encoder_seq, cfg.d_model))
 
     batched = not (cfg.prefix_len or args.sequential)
+    if (args.trace or args.metrics) and not batched:
+        ap.error("--trace/--metrics instrument StreamedBatchEngine; this "
+                 "arch/flag combination falls back to the sequential engine")
     if not batched:
         kw = {}
         if enc_inputs is not None:
@@ -178,7 +190,12 @@ def main() -> None:
                   f"(chunk {st.h2d * 1e3:.2f}ms, decode {st.kex * 1e3:.2f}ms; "
                   f"{plan.tokens_per_s:.1f} tok/s measured vs "
                   f"{plan.baseline_tokens_per_s:.1f} analytic; db {db.path})")
-        eng = StreamedBatchEngine(cfg, params, scfg, plan=plan)
+        tracer = None
+        if args.trace:
+            from repro.obs import Tracer
+            tracer = Tracer()
+        eng = StreamedBatchEngine(cfg, params, scfg, plan=plan,
+                                  tracer=tracer)
         t0 = time.perf_counter()
         uids = [eng.submit(
             np.asarray(tokens[i]),
@@ -226,6 +243,25 @@ def main() -> None:
           f"({total_new / dt:.1f} tok/s incl. prefill+compile)")
     for i, row in enumerate(rows[: min(3, b)]):
         print(f"[serve] req{i}: {row[:12]}{'...' if len(row) > 12 else ''}")
+    if batched and args.trace:
+        from repro.obs import overlap_report
+        eng.obs.to_chrome(args.trace)
+        rep = overlap_report(eng.obs.spans(),
+                             stage_times=eng.last_stage_times)
+        m = rep["measured"]
+        line = (f"[serve] trace: {args.trace} "
+                f"({len(eng.obs.spans())} spans, "
+                f"{eng.obs.dropped} dropped) — overlap "
+                f"{m['efficiency']:.0%} ({m['hidden_s'] * 1e3:.1f}ms of "
+                f"{m['total_s'] * 1e3:.1f}ms transfer hidden)")
+        if "predicted" in rep:
+            p = rep["predicted"]
+            line += (f"; R-gate predicts {p['efficiency']:.0%} "
+                     f"({p['decision']}, n={p['n_streams']})")
+        print(line)
+    if batched and args.metrics:
+        import json
+        print(json.dumps(eng.metrics_snapshot(), indent=2, sort_keys=True))
 
 
 if __name__ == "__main__":

@@ -1,0 +1,35 @@
+"""Observability layer: trace spans, metrics, and overlap reconstruction.
+
+``Tracer`` records per-tick spans on the prefill/decode/transfer tracks
+(Chrome/Perfetto export); ``MetricsRegistry`` holds the engine's
+counters and latency/transfer histograms behind one snapshot; ``overlap``
+turns the recorded timeline into a measured overlap efficiency and
+compares it with the R-gate's analytic prediction.
+
+Everything here is numpy/stdlib-importable — no jax at import time — so
+the runtime and analysis layers can depend on it freely.
+"""
+
+from .metrics import Histogram, MetricsRegistry, SCHEMA_VERSION
+from .overlap import (
+    measured_overlap,
+    overlap_report,
+    predicted_overlap,
+    stage_times_from_trace,
+)
+from .trace import TRACKS, Span, Tracer, read_trace, span_tree
+
+__all__ = [
+    "Histogram",
+    "MetricsRegistry",
+    "SCHEMA_VERSION",
+    "Span",
+    "Tracer",
+    "TRACKS",
+    "read_trace",
+    "span_tree",
+    "measured_overlap",
+    "predicted_overlap",
+    "overlap_report",
+    "stage_times_from_trace",
+]

@@ -107,14 +107,17 @@ from __future__ import annotations
 import collections
 import dataclasses
 import time
+import warnings
 from typing import Any
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.analysis.budget import host_fetch, tick_path, transfer_budget
+from repro.analysis.budget import (budget_of, host_fetch, tick_path,
+                                   transfer_budget)
 from repro.core import rmetric
+from repro.obs import MetricsRegistry, Tracer
 from repro.kernels import quant
 from repro.models import transformer as T
 from repro.models.transformer import ModelConfig
@@ -663,6 +666,31 @@ def plan_decode_policy(
         plan_block_size(stage_times, prefill_chunk=chunk, max_seq=max_seq))
 
 
+class _MetricAttr:
+    """Data descriptor bridging a legacy counter attribute to the metrics
+    registry.
+
+    The engine's bench counters (``decode_steps``, ``prefix_hits``, ...)
+    predate the registry; tests, benches and the profiler both read them
+    and *assign* them (resetting to 0 between runs), so the shim must be
+    a full data descriptor: reads come from ``engine.metrics``, writes go
+    back into it.  Values keep whatever Python type the caller stored
+    (ints stay ints).  New code should use ``engine.metrics`` /
+    ``engine.metrics_snapshot()`` directly.
+    """
+
+    def __init__(self, metric: str):
+        self.metric = metric
+
+    def __get__(self, obj, objtype=None):
+        if obj is None:
+            return self
+        return obj.metrics.value(self.metric)
+
+    def __set__(self, obj, value):
+        obj.metrics.set_value(self.metric, value)
+
+
 class StreamedBatchEngine:
     """Continuous-batching streamed serving engine.
 
@@ -673,8 +701,27 @@ class StreamedBatchEngine:
     request.
     """
 
+    # Legacy counter attributes, unified onto the metrics registry (one
+    # snapshot via metrics_snapshot()); the bare names stay assignable.
+    decode_steps = _MetricAttr("serving.decode_steps")
+    peak_active = _MetricAttr("serving.peak_active")
+    preemptions = _MetricAttr("serving.preemptions")
+    admissions = _MetricAttr("serving.admissions")
+    admit_seconds = _MetricAttr("serving.admit_seconds")
+    prefix_hits = _MetricAttr("serving.prefix_hits")
+    prefix_pages_shared = _MetricAttr("serving.prefix_pages_shared")
+    snapshot_hits = _MetricAttr("serving.snapshot_hits")
+    snapshot_tokens_reused = _MetricAttr("serving.snapshot_tokens_reused")
+    readmit_prefix_hits = _MetricAttr("serving.readmit_prefix_hits")
+    readmit_prefix_pages = _MetricAttr("serving.readmit_prefix_pages")
+    spec_ticks = _MetricAttr("serving.spec_ticks")
+    spec_proposed = _MetricAttr("serving.spec_proposed")
+    spec_accepted = _MetricAttr("serving.spec_accepted")
+
     def __init__(self, cfg: ModelConfig, params: Any, scfg: ServeConfig,
-                 *, plan: Any = None, drafter: Any = None):
+                 *, plan: Any = None, drafter: Any = None,
+                 tracer: Tracer | None = None,
+                 metrics: MetricsRegistry | None = None):
         # A TunedPlan (repro.tuning.db) — or anything with its ``apply``
         # contract — rewrites the streaming knobs (chunk, interleave, page
         # geometry, slot count, kernel path, compile-cache caps) before the
@@ -694,6 +741,14 @@ class StreamedBatchEngine:
         self.cfg = cfg
         self.params = params
         self.scfg = scfg
+        # Observability (repro.obs): the registry backs every counter
+        # below (set before them — the _MetricAttr descriptors route
+        # through it); the tracer is a disabled stub unless the caller
+        # wants spans, so the tick-path hooks cost one attribute check.
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        self.obs = tracer if tracer is not None else Tracer(enabled=False)
+        self._tick_index = 0  # span ordinal (tick= arg on decode spans)
+        self._budget_flagged = False  # live-STR002 warned once per engine
         self.servable = build_servable(cfg, params, scfg)
         self.single = self.servable.single  # b=1 prefill machinery
         b = scfg.max_batch
@@ -770,6 +825,13 @@ class StreamedBatchEngine:
             self.drafter = (drafter if drafter is not None
                             else _spec.NGramDrafter(max_n=scfg.spec_ngram))
             self._spec_jit = self.servable.make_verifier(paged=self.paged)
+        # Runtime transfer accounting — the dynamic twin of the analyzer's
+        # static STR002 audit: the declared @transfer_budget of the step
+        # builders actually used, checked per tick against fetched bytes
+        # while tracing is enabled (see _account_tick).
+        self._decode_budget = budget_of(self.servable.decode_fn)
+        self._verify_budget = (budget_of(self.servable.make_verifier)
+                               if scfg.spec_decode else None)
 
     # -- queue ----------------------------------------------------------------
 
@@ -836,7 +898,9 @@ class StreamedBatchEngine:
                 logits_row / self.scfg.temperature)
         else:
             pick = jnp.argmax(logits_row, axis=-1)
-        return int(host_fetch(pick))
+        val = host_fetch(pick)
+        self.metrics.inc("transfer.d2h_bytes", int(val.nbytes))
+        return int(val)
 
     @tick_path(allowed_fetches=0)
     def _admit(self, req: Request, slot: _Slot) -> None:
@@ -853,6 +917,8 @@ class StreamedBatchEngine:
         full prefill would (bitwise token parity with the unshared path).
         """
         t0 = time.perf_counter()
+        ot0 = self.obs.t()
+        n_chunks = 0  # chunk tasks dispatched (span arg; overlap recon)
         shared_pages = 0
         if self.paged:
             if self.scfg.prefix_sharing:
@@ -900,7 +966,10 @@ class StreamedBatchEngine:
                 shared_len = n
                 self.snapshot_hits += 1
                 self.snapshot_tokens_reused += n
+        ht0 = self.obs.t()
         tokens = jnp.asarray(req.tokens[None, shared_len:], jnp.int32)
+        self.obs.add("transfer", "h2d_stage", ht0, uid=req.uid,
+                     h2d_bytes=int(len(req.tokens) - shared_len) * 4)
         logits = caches = None
         pos = shared_len
         if use_fused:
@@ -922,6 +991,7 @@ class StreamedBatchEngine:
             # tasks the legacy path would — fp32 parity is bitwise.
             chunk = min(self.scfg.prefill_chunk, shared_len + s_total)
             for lo in range(0, s_total, chunk):
+                ct0 = self.obs.t()
                 piece = tokens[:, lo: lo + chunk]
                 n_ctx = self.kv.pages_for(pos + piece.shape[1])
                 fn = self.single._fused_chunk_fn(piece.shape[1], pos)
@@ -929,25 +999,41 @@ class StreamedBatchEngine:
                     self.params, self.kv.pools,
                     jnp.asarray(row[:, :n_ctx]), piece)
                 pos += piece.shape[1]
+                n_chunks += 1
                 # Chunk is dispatched (async); decode the active slots while
                 # it is in flight — same overlap as the legacy path.
                 for _ in range(self.scfg.decode_interleave):
                     if self.active_slots:
                         self._decode_tick()
+                # The span is the chunk's in-flight window (dispatch through
+                # the interleaved ticks), not its compute time — decode
+                # spans landing inside it are transfer time hidden.
+                self.obs.add("prefill", "prefill_chunk", ct0,
+                             uid=req.uid, pos=pos, fused=True)
         else:
+            ct0 = self.obs.t()
             for logits, caches, pos in self.servable.iter_prefill_chunks(
                     req, tokens, caches=caches0, pos0=shared_len):
                 self.servable.maybe_snapshot(req.tokens, caches, pos)
+                n_chunks += 1
                 # Chunk is dispatched (async); decode the active slots while
                 # it is in flight — prefill chunk t+1 overlapping decode
                 # compute.
                 for _ in range(self.scfg.decode_interleave):
                     if self.active_slots:
                         self._decode_tick()
+                # In-flight window span (see the fused loop above).
+                self.obs.add("prefill", "prefill_chunk", ct0,
+                             uid=req.uid, pos=pos, fused=False)
+                ct0 = self.obs.t()
         if self.paged:
             if not use_fused:  # fused chunks already wrote the pool blocks
+                st0 = self.obs.t()
                 self.kv.scatter(
                     slot.index, caches, pos, start_page=shared_pages)
+                self.obs.add("transfer", "page_scatter", st0, uid=req.uid,
+                             pages=int(self.kv.pages_for(pos)
+                                       - shared_pages))
             self.kv.publish(slot.index)
             if self.scfg.prefix_sharing:
                 self.kv.register_prefix(
@@ -955,8 +1041,10 @@ class StreamedBatchEngine:
                     min_pages=self.scfg.prefix_min_pages,
                     align_tokens=self.scfg.prefill_chunk)
         else:
+            st0 = self.obs.t()
             self.caches = self._scatter_jit(
                 self.caches, caches, jnp.int32(slot.index))
+            self.obs.add("transfer", "slot_scatter", st0, uid=req.uid)
         first = self._sample(logits[0, -1], req.uid, 0)
         slot.uid = req.uid
         slot.cur = pos
@@ -968,7 +1056,12 @@ class StreamedBatchEngine:
         self._admit_seq += 1
         self.peak_active = max(self.peak_active, len(self.active_slots))
         self.admissions += 1
-        self.admit_seconds += time.perf_counter() - t0
+        dt = time.perf_counter() - t0
+        self.admit_seconds += dt
+        self.metrics.observe("latency.ttft_s", dt)
+        self.metrics.inc("serving.tokens_emitted", 1)  # the first token
+        self.obs.add("prefill", "admit", ot0, uid=req.uid, chunks=n_chunks,
+                     shared_len=shared_len, prompt_len=len(req.tokens))
         self._reap(slot)
 
     def _reap(self, slot: _Slot) -> None:
@@ -1053,6 +1146,85 @@ class StreamedBatchEngine:
                     self.preemptions += 1
                     break
 
+    def _account_tick(self, name: str, ot0: int, dt: float, *,
+                      n_slots: int, new_tokens: int, d2h_bytes: int,
+                      h2d_bytes: int, budget: Any) -> None:
+        """Per-tick bookkeeping shared by the plain and speculative ticks:
+        metrics (token/byte counters, ITL + per-tick transfer histograms),
+        the decode-track span, and runtime transfer accounting — fetched
+        bytes checked against the step builder's declared
+        ``@transfer_budget`` while tracing is on, with excess flagged as a
+        *live* STR002 (counter + trace marker + one warning per engine).
+        All values are host-side by the time they arrive here, so this
+        never syncs the device."""
+        m = self.metrics
+        m.inc("serving.tokens_emitted", new_tokens)
+        m.inc("time.tick_seconds", dt)
+        m.inc("transfer.d2h_bytes", d2h_bytes)
+        m.inc("transfer.h2d_bytes", h2d_bytes)
+        m.observe("transfer.d2h_bytes_per_tick", d2h_bytes)
+        # Inter-token latency: the tick's wall time per token emitted by a
+        # slot (spec ticks emit several per slot, shrinking the ITL).
+        m.observe("latency.itl_s", dt * n_slots / max(1, new_tokens))
+        self._tick_index += 1
+        self.obs.add("decode", name, ot0, tick=self._tick_index,
+                     slots=n_slots, tokens=new_tokens,
+                     d2h_bytes=d2h_bytes, h2d_bytes=h2d_bytes)
+        if budget is not None and self.obs.enabled:
+            limit = budget.bytes_limit(self.scfg)
+            if limit is not None and d2h_bytes > limit * self.scfg.max_batch:
+                m.inc("analysis.str002_live")
+                self.obs.instant(
+                    "transfer", "STR002", tick=self._tick_index,
+                    d2h_bytes=d2h_bytes,
+                    limit=int(limit) * self.scfg.max_batch)
+                if not self._budget_flagged:
+                    self._budget_flagged = True
+                    warnings.warn(
+                        f"STR002 (live): {name} fetched {d2h_bytes} B this "
+                        f"tick, over the declared @transfer_budget of "
+                        f"{int(limit) * self.scfg.max_batch} B "
+                        f"({int(limit)} B/slot x {self.scfg.max_batch} "
+                        "slots)", RuntimeWarning, stacklevel=3)
+
+    def metrics_snapshot(self) -> dict[str, Any]:
+        """The engine's telemetry in one JSON-serializable dict.
+
+        ``counters``/``histograms`` come straight from the registry (the
+        catalog is in the README's Observability section); ``derived``
+        adds the rates the benches report — tokens/s over engine wall
+        time, spec acceptance, prefix/snapshot hit rates, and the paged
+        pool's utilization stats.
+        """
+        snap = self.metrics.snapshot()
+        c = snap["counters"]
+        tokens = c.get("serving.tokens_emitted", 0)
+        wall = (c.get("time.tick_seconds", 0.0)
+                + c.get("serving.admit_seconds", 0.0))
+        admissions = c.get("serving.admissions", 0)
+        proposed = c.get("serving.spec_proposed", 0)
+        derived: dict[str, Any] = {
+            "tokens_per_s": tokens / wall if wall > 0 else 0.0,
+            "spec_acceptance": (c.get("serving.spec_accepted", 0) / proposed
+                                if proposed else 0.0),
+            "prefix_hit_rate": (c.get("serving.prefix_hits", 0) / admissions
+                                if admissions else 0.0),
+            "snapshot_hit_rate": (c.get("serving.snapshot_hits", 0)
+                                  / admissions if admissions else 0.0),
+        }
+        if self.paged:
+            st = self.kv.stats(active_slots=len(self.active_slots))
+            derived["pool"] = {
+                "capacity": st.capacity,
+                "in_use": st.in_use,
+                "peak_in_use": st.peak_in_use,
+                "utilization": st.utilization,
+                "page_bytes": st.page_bytes,
+                "bytes_in_use": st.bytes_in_use,
+            }
+        snap["derived"] = derived
+        return snap
+
     @tick_path(allowed_fetches=1)
     def _plain_tick(self) -> None:
         """One batched decode step for all slots (inactive rows are padding).
@@ -1065,12 +1237,15 @@ class StreamedBatchEngine:
         act = self.active_slots
         if not act:
             return
+        ot0 = self.obs.t()
+        t0 = time.perf_counter()
         b = self.scfg.max_batch
         toks = np.zeros((b, 1), np.int32)
         cur = np.zeros((b,), np.int32)
         for s in act:
             toks[s.index, 0] = s.pending
             cur[s.index] = s.cur
+        h2d_bytes = int(toks.nbytes) + int(cur.nbytes)
         args = [self.params, jnp.asarray(toks)]
         if self.paged:
             args += [self.kv.pools, self.kv.device_page_table()]
@@ -1096,6 +1271,11 @@ class StreamedBatchEngine:
             s.pending = int(picks[s.index])
             s.emitted.append(int(picks[s.index]))
             self._reap(s)
+        self._account_tick(
+            "decode_tick", ot0, time.perf_counter() - t0,
+            n_slots=len(act), new_tokens=len(act),
+            d2h_bytes=int(picks.nbytes), h2d_bytes=h2d_bytes,
+            budget=self._decode_budget)
 
     # -- speculative decode ----------------------------------------------------
 
@@ -1129,10 +1309,13 @@ class StreamedBatchEngine:
         act = self.active_slots
         if not act:
             return
+        ot0 = self.obs.t()
+        t0 = time.perf_counter()
         b = self.scfg.max_batch
         toks = np.zeros((b, k + 1), np.int32)
         cur = np.zeros((b,), np.int32)
         d_len = np.zeros((b,), np.int32)
+        dt0 = self.obs.t()
         for s in act:
             toks[s.index, 0] = s.pending
             cur[s.index] = s.cur
@@ -1156,6 +1339,8 @@ class StreamedBatchEngine:
                 toks[s.index, 1: 1 + draft.size] = draft
                 d_len[s.index] = draft.size
                 self.spec_proposed += int(draft.size)
+        self.obs.add("decode", "spec_draft", dt0,
+                     proposed=int(d_len.sum()))
         if not int(d_len.sum()):
             # Every drafter came back empty (lookup miss, or the slots are
             # at their final token): the k+1-wide verify step would pay
@@ -1184,10 +1369,13 @@ class StreamedBatchEngine:
         self.spec_ticks += 1
         emit = host_fetch(emit)  # (B, k+1) + (B,): the tick's only D2H
         n_accept = host_fetch(n_accept)
+        new_tokens = 0
+        rt0 = self.obs.t()
         for s in act:
             n = int(n_accept[s.index])
             self.spec_accepted += n
             new = emit[s.index, : n + 1].tolist()
+            new_tokens += n + 1
             s.cur += n + 1
             s.pending = new[-1]
             s.emitted.extend(new)
@@ -1197,6 +1385,16 @@ class StreamedBatchEngine:
                 # invariant the plain tick maintains.
                 self.kv.truncate(s.index, s.cur)
             self._reap(s)
+        if self.paged:
+            self.obs.add("transfer", "spec_rollback", rt0,
+                         accepted=new_tokens - len(act))
+        self._account_tick(
+            "spec_tick", ot0, time.perf_counter() - t0,
+            n_slots=len(act), new_tokens=new_tokens,
+            d2h_bytes=int(emit.nbytes) + int(n_accept.nbytes),
+            h2d_bytes=(int(toks.nbytes) + int(cur.nbytes)
+                       + int(d_len.nbytes)),
+            budget=self._verify_budget)
 
     # -- scheduling loop -------------------------------------------------------
 
@@ -1268,6 +1466,7 @@ class StreamedBatchEngine:
         slot = next((s for s in self.slots if s.uid == uid), None)
         if slot is None:
             raise KeyError(f"uid {uid} not active")
+        et0 = self.obs.t()
         if self.paged:
             caches = self.kv.gather(slot.index, slot.cur)
             n_pages = self.kv.pages_for(slot.cur)
@@ -1275,6 +1474,8 @@ class StreamedBatchEngine:
         else:
             caches = self._gather_jit(self.caches, jnp.int32(slot.index))
             n_pages = 0
+        self.obs.add("transfer", "evict", et0, uid=uid, pages=n_pages,
+                     cur=slot.cur)
         ev = EvictedRequest(
             uid=uid, caches=caches,
             cur=slot.cur, pending=slot.pending,
@@ -1314,6 +1515,8 @@ class StreamedBatchEngine:
         slot = next((s for s in self.slots if s.free), None)
         if slot is None:
             raise RuntimeError("no free slot to readmit into")
+        rt0 = self.obs.t()
+        shared_pages = 0
         if self.paged:
             shared_pages, blocks = self._readmit_prefix(ev)
             if shared_pages:
@@ -1336,6 +1539,8 @@ class StreamedBatchEngine:
         else:
             self.caches = self._scatter_jit(
                 self.caches, ev.caches, jnp.int32(slot.index))
+        self.obs.add("transfer", "readmit", rt0, uid=ev.uid,
+                     pages=ev.n_pages, shared_pages=shared_pages)
         slot.uid = ev.uid
         slot.cur = ev.cur
         slot.pending = ev.pending

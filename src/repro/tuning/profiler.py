@@ -27,6 +27,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import rmetric
+from repro.obs import stage_times_from_trace
 from repro.tuning.workload import WorkloadDescriptor, synth_prompts
 
 _REPEATS = 3  # median-of-N per probe; the harness is a tuner, not a bench
@@ -72,15 +73,25 @@ def profile_engine(
 ) -> StageProfile:
     """Measure the serving stages on a live (idle) ``StreamedBatchEngine``.
 
-    Chunk and decode come from the engine's own warmed probe
-    (``measure_stage_times``, medianized here); the H2D/D2H staging and the
-    page scatter/gather are measured directly.  The engine must be idle:
-    the paged probes borrow a free slot and release it.
+    Chunk and decode come from the engine's recorded trace when tracing is
+    on and has seen real traffic (``repro.obs.stage_times_from_trace`` —
+    production ticks beat synthetic probes, and reading the ring buffer
+    costs the live engine nothing); otherwise from the engine's own warmed
+    probe (``measure_stage_times``, medianized here).  The H2D/D2H staging
+    and the page scatter/gather are always measured directly.  The engine
+    must be idle: the paged probes borrow a free slot and release it.
     """
     chunk = min(eng.scfg.prefill_chunk, prompt_len)
-    st = [eng.measure_stage_times(prompt_len) for _ in range(repeats)]
-    chunk_s = float(np.median([t.h2d for t in st]))
-    decode_s = float(np.median([t.kex for t in st]))
+    traced = None
+    obs = getattr(eng, "obs", None)
+    if obs is not None and obs.enabled:
+        traced = stage_times_from_trace(obs.spans())
+    if traced is not None:
+        chunk_s, decode_s = traced.h2d, traced.kex
+    else:
+        st = [eng.measure_stage_times(prompt_len) for _ in range(repeats)]
+        chunk_s = float(np.median([t.h2d for t in st]))
+        decode_s = float(np.median([t.kex for t in st]))
 
     # Host-link staging: the chunk's token buffer up, the tick's ids down.
     toks = np.zeros((1, chunk), np.int32)
