@@ -4,7 +4,7 @@
 # stream-safety analyzer (required in CI alongside tier-1).
 PYTHONPATH := src
 
-.PHONY: test test-slow lint-streams bench tune trace
+.PHONY: test test-slow lint-streams bench bench-check tune trace doctor
 
 test:  ## tier-1 gate (pytest.ini already excludes -m slow)
 	PYTHONPATH=$(PYTHONPATH) python -m pytest -x -q -m "not slow"
@@ -15,8 +15,14 @@ test-slow:  ## heavy end-to-end paths + the sharing bench smoke
 lint-streams:  ## stream-safety analyzer: sync audit, kernel lint, pool audit
 	PYTHONPATH=$(PYTHONPATH) JAX_PLATFORMS=cpu python -m repro.analysis
 
-bench:  ## paper-figure benchmarks (CSV to stdout)
+bench:  ## paper-figure benchmarks (CSV to stdout; refreshes BENCH_serving.json)
 	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.run
+
+bench-check:  ## perf-regression sentinel: fresh bench vs committed BENCH_*.json
+	PYTHONPATH=$(PYTHONPATH) JAX_PLATFORMS=cpu python -m repro.obs.baseline --run
+
+doctor:  ## diagnose the last traced run (make trace writes trace.json)
+	PYTHONPATH=$(PYTHONPATH) python -m repro.obs.doctor trace.json
 
 trace:  ## traced serving smoke: writes trace.json (open at ui.perfetto.dev)
 	PYTHONPATH=$(PYTHONPATH) JAX_PLATFORMS=cpu python -m repro.launch.serve \

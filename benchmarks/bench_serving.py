@@ -72,7 +72,8 @@ import numpy as np
 
 import repro.configs as C
 from repro.models import transformer as T
-from repro.obs import MetricsRegistry, Tracer, overlap_report
+from repro.obs import (MetricsRegistry, Tracer, overlap_report,
+                       reconstruct_timelines, timeline_aggregates)
 from repro.runtime.serving import ServeConfig, ServingEngine, StreamedBatchEngine
 
 ARCH = "qwen3-4b"
@@ -494,11 +495,29 @@ def run_obs(
         spans = on["tr"].spans()
         rep = overlap_report(spans,
                              stage_times=eng.measure_stage_times(prompt_len),
-                             category=category)
+                             category=category, dropped=on["tr"].dropped)
         meas, pred = rep["measured"], rep["predicted"]
         m = eng.metrics
         ttft = m.histogram("latency.ttft_s").snapshot()
         itl = m.histogram("latency.itl_s").snapshot()
+        # Offline reconstruction must agree with the engine's own
+        # accounting: same token count, same admissions, and the
+        # trace-rebuilt TTFT/ITL aggregates within histogram bucket
+        # error of the registry's (they sample the same clock readings).
+        agg = timeline_aggregates(reconstruct_timelines(
+            spans, dropped=on["tr"].dropped))
+        assert agg["requests"] == n_requests and agg["partial"] == 0, (
+            f"mode {mode}: rebuilt {agg['requests']} timelines "
+            f"({agg['partial']} partial) from {n_requests} requests")
+        assert agg["itl_count"] == itl["count"], (
+            f"mode {mode}: timeline ITL count {agg['itl_count']} vs "
+            f"histogram {itl['count']}")
+        for name, mine, hist in (("ttft", agg["ttft_mean_s"], ttft["mean"]),
+                                 ("itl", agg["itl_mean_s"], itl["mean"])):
+            if hist > 0:
+                assert abs(mine - hist) / hist < 0.05, (
+                    f"mode {mode}: timeline {name} mean {mine:.6f}s vs "
+                    f"histogram {hist:.6f}s — over bucket error")
         d2h = m.histogram("transfer.d2h_bytes_per_tick").snapshot()
         live_str002 = m.value("analysis.str002_live", 0)
         assert live_str002 == 0, (
@@ -528,7 +547,17 @@ def run_obs(
             "d2h_bytes_per_tick": {"mean": d2h["mean"], "max": d2h["max"]},
             "spans": len(spans),
             "dropped_spans": on["tr"].dropped,
+            "partial": meas["partial"],
             "str002_live": live_str002,
+            "timelines": {
+                "requests": agg["requests"],
+                "finished": agg["finished"],
+                "tokens": agg["tokens"],
+                "itl_count": agg["itl_count"],
+                "ttft_mean_ms": agg["ttft_mean_s"] * 1e3,
+                "itl_mean_ms": agg["itl_mean_s"] * 1e3,
+                "queue_wait_p50_ms": agg["queue_wait_p50_s"] * 1e3,
+            },
         })
         lines += [
             f"obs_overlap_{mode},{meas['efficiency']:.3f},"

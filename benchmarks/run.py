@@ -50,6 +50,10 @@ def main() -> None:
         print(f"{name}/_total,{dt:.0f},us", flush=True)
         for line in lines:
             print(line, flush=True)
+        if name == "serving":
+            # Refresh the committed baseline the regression sentinel
+            # (repro.obs.baseline / `make bench-check`) gates against.
+            print(f"# wrote {bench_serving.write_json(lines)}", flush=True)
     if failures:
         sys.exit(1)
 

@@ -97,6 +97,17 @@ def main() -> None:
                     help="print engine.metrics_snapshot() as JSON after "
                          "the run (counters, latency histograms, pool "
                          "stats)")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="write engine.metrics_snapshot() as JSON to this "
+                         "file after the run (the snapshot obs.doctor "
+                         "consumes next to --trace)")
+    ap.add_argument("--slo-ttft-ms", type=float, default=None,
+                    help="SLO target: submit -> first token, milliseconds "
+                         "(queue wait included); scored per request into "
+                         "the snapshot's derived.slo block")
+    ap.add_argument("--slo-itl-ms", type=float, default=None,
+                    help="SLO target: worst per-token inter-token latency, "
+                         "milliseconds (an eviction stall lands here)")
     args = ap.parse_args()
     if args.prefix_sharing and not args.paged:
         ap.error("--prefix-sharing requires --paged")
@@ -146,9 +157,12 @@ def main() -> None:
             jax.random.PRNGKey(2), (b, cfg.encoder_seq, cfg.d_model))
 
     batched = not (cfg.prefix_len or args.sequential)
-    if (args.trace or args.metrics) and not batched:
-        ap.error("--trace/--metrics instrument StreamedBatchEngine; this "
-                 "arch/flag combination falls back to the sequential engine")
+    slo_flags = (args.slo_ttft_ms is not None or args.slo_itl_ms is not None)
+    if (args.trace or args.metrics or args.metrics_out
+            or slo_flags) and not batched:
+        ap.error("--trace/--metrics/--metrics-out/--slo-* instrument "
+                 "StreamedBatchEngine; this arch/flag combination falls "
+                 "back to the sequential engine")
     if not batched:
         kw = {}
         if enc_inputs is not None:
@@ -194,8 +208,13 @@ def main() -> None:
         if args.trace:
             from repro.obs import Tracer
             tracer = Tracer()
+        slo = None
+        if slo_flags:
+            from repro.obs import SLOPolicy
+            slo = SLOPolicy.from_ms(ttft_ms=args.slo_ttft_ms,
+                                    itl_ms=args.slo_itl_ms)
         eng = StreamedBatchEngine(cfg, params, scfg, plan=plan,
-                                  tracer=tracer)
+                                  tracer=tracer, slo=slo)
         t0 = time.perf_counter()
         uids = [eng.submit(
             np.asarray(tokens[i]),
@@ -244,24 +263,44 @@ def main() -> None:
     for i, row in enumerate(rows[: min(3, b)]):
         print(f"[serve] req{i}: {row[:12]}{'...' if len(row) > 12 else ''}")
     if batched and args.trace:
-        from repro.obs import overlap_report
+        from repro.obs import (overlap_report, reconstruct_timelines,
+                               timeline_aggregates)
         eng.obs.to_chrome(args.trace)
         rep = overlap_report(eng.obs.spans(),
-                             stage_times=eng.last_stage_times)
+                             stage_times=eng.last_stage_times,
+                             dropped=eng.obs.dropped)
         m = rep["measured"]
         line = (f"[serve] trace: {args.trace} "
                 f"({len(eng.obs.spans())} spans, "
                 f"{eng.obs.dropped} dropped) — overlap "
                 f"{m['efficiency']:.0%} ({m['hidden_s'] * 1e3:.1f}ms of "
                 f"{m['total_s'] * 1e3:.1f}ms transfer hidden)")
+        if m["partial"]:
+            # ring wrap lost the head of the timeline: the number above
+            # is from a truncated window, never report it as the run's
+            line += " [PARTIAL: ring wrapped, efficiency is truncated]"
         if "predicted" in rep:
             p = rep["predicted"]
             line += (f"; R-gate predicts {p['efficiency']:.0%} "
                      f"({p['decision']}, n={p['n_streams']})")
         print(line)
-    if batched and args.metrics:
+        agg = timeline_aggregates(reconstruct_timelines(
+            eng.obs.spans(), dropped=eng.obs.dropped, warn=False))
+        print(f"[serve] requests: {agg['requests']} timelines "
+              f"({agg['finished']} finished, {agg['partial']} partial) — "
+              f"ttft p50 {agg['ttft_p50_s'] * 1e3:.1f}ms, queue wait p50 "
+              f"{agg['queue_wait_p50_s'] * 1e3:.1f}ms, itl p50 "
+              f"{agg['itl_p50_s'] * 1e3:.2f}ms, "
+              f"{agg['evictions']} evictions")
+    if batched and (args.metrics or args.metrics_out):
         import json
-        print(json.dumps(eng.metrics_snapshot(), indent=2, sort_keys=True))
+        snap = eng.metrics_snapshot()
+        if args.metrics_out:
+            with open(args.metrics_out, "w") as f:
+                json.dump(snap, f, indent=2, sort_keys=True)
+            print(f"[serve] metrics: {args.metrics_out}")
+        if args.metrics:
+            print(json.dumps(snap, indent=2, sort_keys=True))
 
 
 if __name__ == "__main__":

@@ -4,7 +4,12 @@
 (Chrome/Perfetto export); ``MetricsRegistry`` holds the engine's
 counters and latency/transfer histograms behind one snapshot; ``overlap``
 turns the recorded timeline into a measured overlap efficiency and
-compares it with the R-gate's analytic prediction.
+compares it with the R-gate's analytic prediction.  On top of those:
+``requests`` rebuilds per-request lifecycles (queue wait, TTFT,
+per-token ITLs, stalls) from a trace, ``slo`` scores them against
+TTFT/ITL targets (attainment + goodput), ``doctor`` turns a trace into a
+ranked bottleneck diagnosis, and ``baseline`` gates fresh bench results
+against the committed ``BENCH_*.json``.
 
 Everything here is numpy/stdlib-importable — no jax at import time — so
 the runtime and analysis layers can depend on it freely.
@@ -17,6 +22,13 @@ from .overlap import (
     predicted_overlap,
     stage_times_from_trace,
 )
+from .requests import (
+    RequestTimeline,
+    reconstruct_timelines,
+    timeline_aggregates,
+    timelines_from_trace,
+)
+from .slo import SLOPolicy, score_timelines
 from .trace import TRACKS, Span, Tracer, read_trace, span_tree
 
 __all__ = [
@@ -32,4 +44,10 @@ __all__ = [
     "predicted_overlap",
     "overlap_report",
     "stage_times_from_trace",
+    "RequestTimeline",
+    "reconstruct_timelines",
+    "timelines_from_trace",
+    "timeline_aggregates",
+    "SLOPolicy",
+    "score_timelines",
 ]

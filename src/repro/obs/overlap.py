@@ -89,8 +89,13 @@ def covered_time(target: Sequence[tuple[int, int]],
 
 def measured_overlap(spans: Iterable[Span],
                      hide_tracks: Sequence[str] = HIDE_TRACKS,
-                     under_tracks: Sequence[str] = UNDER_TRACKS) -> dict[str, Any]:
-    """Fraction of transfer-like in-flight time hidden under decode work."""
+                     under_tracks: Sequence[str] = UNDER_TRACKS,
+                     *, dropped: int = 0) -> dict[str, Any]:
+    """Fraction of transfer-like in-flight time hidden under decode work.
+
+    ``dropped`` is the tracer's ring-wrap count: a wrapped ring lost the
+    timeline's head, so the efficiency is computed from a truncated
+    window and flagged ``partial`` rather than silently reported."""
     hide = interval_union((s.t0_ns, s.t1_ns) for s in spans
                           if s.track in hide_tracks and s.dur_ns > 0)
     under = interval_union((s.t0_ns, s.t1_ns) for s in spans
@@ -101,6 +106,8 @@ def measured_overlap(spans: Iterable[Span],
         "hidden_s": hidden * 1e-9,
         "total_s": total * 1e-9,
         "efficiency": (hidden / total) if total > 0 else 0.0,
+        "partial": dropped > 0,
+        "dropped_spans": dropped,
     }
 
 
@@ -124,10 +131,12 @@ def predicted_overlap(times: StageTimes, *, max_streams: int = 16) -> dict[str, 
 
 def overlap_report(spans: Iterable[Span],
                    stage_times: StageTimes | None = None,
-                   *, category: str | None = None) -> dict[str, Any]:
+                   *, category: str | None = None,
+                   dropped: int = 0) -> dict[str, Any]:
     """Measured overlap, optionally against the analytic prediction."""
     spans = list(spans)
-    report: dict[str, Any] = {"measured": measured_overlap(spans)}
+    report: dict[str, Any] = {
+        "measured": measured_overlap(spans, dropped=dropped)}
     if category is not None:
         report["category"] = category
     if stage_times is not None:

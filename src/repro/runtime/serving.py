@@ -522,6 +522,8 @@ class Request:
     enc_inputs: np.ndarray | None = None  # encoder-decoder only: this
     # request's encoded frames (1, encoder_seq, d_model) — the SYNC stage
     # input, staged once at admission
+    t_submit: float = 0.0  # perf_counter at submit(); queue wait (and the
+    # submit->first-token TTFT the SLO policy scores) is measured from here
 
 
 @dataclasses.dataclass
@@ -537,6 +539,13 @@ class _Slot:
     seq: int = 0  # admission order (newest is preempted first)
     prompt: np.ndarray | None = None  # prompt tokens: the drafter's lookup
     # corpus, and the readmission prefix re-map's registry key
+    # Per-request latency bookkeeping (host floats only; the SLO policy
+    # scores these at reap, and evict/readmit carries them unchanged):
+    ttft_s: float = 0.0  # submit -> first token (queue wait + admission)
+    t_last: float = 0.0  # perf_counter of the request's last emitted token
+    itl_max: float = 0.0  # worst per-token inter-token latency so far —
+    # a stall (evict -> readmit wait) lands here, which is the point
+    evictions: int = 0  # times this request was preempted mid-decode
 
     @property
     def free(self) -> bool:
@@ -564,6 +573,12 @@ class EvictedRequest:
     prompt: np.ndarray | None = None  # prompt tokens, carried so readmission
     # can re-map a registered shared prefix at refcount+1 instead of
     # re-scattering exclusive pages (and so the drafter keeps its corpus)
+    # Latency bookkeeping rides through the evict->readmit cycle so the
+    # reap-time SLO score sees the whole request, stall included:
+    ttft_s: float = 0.0
+    t_last: float = 0.0
+    itl_max: float = 0.0
+    evictions: int = 0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -721,7 +736,8 @@ class StreamedBatchEngine:
     def __init__(self, cfg: ModelConfig, params: Any, scfg: ServeConfig,
                  *, plan: Any = None, drafter: Any = None,
                  tracer: Tracer | None = None,
-                 metrics: MetricsRegistry | None = None):
+                 metrics: MetricsRegistry | None = None,
+                 slo: Any = None):
         # A TunedPlan (repro.tuning.db) — or anything with its ``apply``
         # contract — rewrites the streaming knobs (chunk, interleave, page
         # geometry, slot count, kernel path, compile-cache caps) before the
@@ -747,6 +763,8 @@ class StreamedBatchEngine:
         # wants spans, so the tick-path hooks cost one attribute check.
         self.metrics = metrics if metrics is not None else MetricsRegistry()
         self.obs = tracer if tracer is not None else Tracer(enabled=False)
+        self.slo = slo  # an obs.slo.SLOPolicy (duck-typed: ttft_ok/itl_ok/
+        # met/as_dict); None = no per-request SLO scoring at reap
         self._tick_index = 0  # span ordinal (tick= arg on decode spans)
         self._budget_flagged = False  # live-STR002 warned once per engine
         self.servable = build_servable(cfg, params, scfg)
@@ -864,7 +882,8 @@ class StreamedBatchEngine:
                     f"shrink the request")
         uid = self._next_uid
         self._next_uid += 1
-        self.queue.append(Request(uid, tokens, max_new, enc_inputs))
+        self.queue.append(Request(uid, tokens, max_new, enc_inputs,
+                                  t_submit=time.perf_counter()))
         return uid
 
     @property
@@ -918,6 +937,10 @@ class StreamedBatchEngine:
         """
         t0 = time.perf_counter()
         ot0 = self.obs.t()
+        # Queue wait: submit -> queue pop.  Direct _admit calls (tests)
+        # carry no submit stamp; they waited nothing.
+        queue_wait = max(0.0, t0 - req.t_submit) if req.t_submit else 0.0
+        self.metrics.observe("latency.queue_wait_s", queue_wait)
         n_chunks = 0  # chunk tasks dispatched (span arg; overlap recon)
         shared_pages = 0
         if self.paged:
@@ -1058,15 +1081,35 @@ class StreamedBatchEngine:
         self.admissions += 1
         dt = time.perf_counter() - t0
         self.admit_seconds += dt
+        slot.ttft_s = queue_wait + dt  # the SLO policy's TTFT: from submit
+        slot.t_last = t0 + dt  # ITL clock starts at the first token
+        slot.itl_max = 0.0
+        slot.evictions = 0
         self.metrics.observe("latency.ttft_s", dt)
         self.metrics.inc("serving.tokens_emitted", 1)  # the first token
         self.obs.add("prefill", "admit", ot0, uid=req.uid, chunks=n_chunks,
-                     shared_len=shared_len, prompt_len=len(req.tokens))
+                     shared_len=shared_len, prompt_len=len(req.tokens),
+                     slot=slot.index, queue_wait_s=queue_wait,
+                     max_new=req.max_new_tokens)
         self._reap(slot)
 
     def _reap(self, slot: _Slot) -> None:
-        """Free a finished slot (and its pages) and record its output."""
+        """Free a finished slot (and its pages) and record its output;
+        with an ``slo`` policy, score the finished request here (the one
+        place every request passes through exactly once)."""
         if slot.done:
+            if self.slo is not None:
+                m = self.metrics
+                m.inc("slo.requests")
+                if self.slo.met(ttft_s=slot.ttft_s, itl_s=slot.itl_max):
+                    m.inc("slo.requests_met")
+                    # Goodput: only tokens from SLO-met requests count.
+                    m.inc("slo.goodput_tokens", len(slot.emitted))
+                else:
+                    if not self.slo.ttft_ok(slot.ttft_s):
+                        m.inc("slo.ttft_violations")
+                    if not self.slo.itl_ok(slot.itl_max):
+                        m.inc("slo.itl_violations")
             self.outputs[slot.uid] = np.asarray(slot.emitted, np.int32)
             slot.uid = None
             slot.emitted = []
@@ -1148,28 +1191,29 @@ class StreamedBatchEngine:
 
     def _account_tick(self, name: str, ot0: int, dt: float, *,
                       n_slots: int, new_tokens: int, d2h_bytes: int,
-                      h2d_bytes: int, budget: Any) -> None:
+                      h2d_bytes: int, budget: Any,
+                      attrib: dict[str, Any] | None = None) -> None:
         """Per-tick bookkeeping shared by the plain and speculative ticks:
-        metrics (token/byte counters, ITL + per-tick transfer histograms),
-        the decode-track span, and runtime transfer accounting — fetched
-        bytes checked against the step builder's declared
-        ``@transfer_budget`` while tracing is on, with excess flagged as a
-        *live* STR002 (counter + trace marker + one warning per engine).
-        All values are host-side by the time they arrive here, so this
-        never syncs the device."""
+        metrics (token/byte counters, per-tick transfer histograms), the
+        decode-track span (``attrib`` carries the per-slot uid/token
+        attribution lists when tracing is on), and runtime transfer
+        accounting — fetched bytes checked against the step builder's
+        declared ``@transfer_budget`` while tracing is on, with excess
+        flagged as a *live* STR002 (counter + trace marker + one warning
+        per engine).  All values are host-side by the time they arrive
+        here, so this never syncs the device.  (ITL is observed per slot
+        in the tick loops, where the per-request emit clock lives.)"""
         m = self.metrics
         m.inc("serving.tokens_emitted", new_tokens)
         m.inc("time.tick_seconds", dt)
         m.inc("transfer.d2h_bytes", d2h_bytes)
         m.inc("transfer.h2d_bytes", h2d_bytes)
         m.observe("transfer.d2h_bytes_per_tick", d2h_bytes)
-        # Inter-token latency: the tick's wall time per token emitted by a
-        # slot (spec ticks emit several per slot, shrinking the ITL).
-        m.observe("latency.itl_s", dt * n_slots / max(1, new_tokens))
         self._tick_index += 1
         self.obs.add("decode", name, ot0, tick=self._tick_index,
                      slots=n_slots, tokens=new_tokens,
-                     d2h_bytes=d2h_bytes, h2d_bytes=h2d_bytes)
+                     d2h_bytes=d2h_bytes, h2d_bytes=h2d_bytes,
+                     **(attrib or {}))
         if budget is not None and self.obs.enabled:
             limit = budget.bytes_limit(self.scfg)
             if limit is not None and d2h_bytes > limit * self.scfg.max_batch:
@@ -1212,6 +1256,22 @@ class StreamedBatchEngine:
             "snapshot_hit_rate": (c.get("serving.snapshot_hits", 0)
                                   / admissions if admissions else 0.0),
         }
+        if self.slo is not None:
+            done = c.get("slo.requests", 0)
+            met = c.get("slo.requests_met", 0)
+            derived["slo"] = {
+                "policy": self.slo.as_dict(),
+                "requests": done,
+                "met": met,
+                "attainment": met / done if done else 0.0,
+                # Goodput: tokens/s counting only SLO-met requests' tokens
+                # over the same engine wall time as tokens_per_s.
+                "goodput_tokens_per_s": (
+                    c.get("slo.goodput_tokens", 0) / wall
+                    if wall > 0 else 0.0),
+                "ttft_violations": c.get("slo.ttft_violations", 0),
+                "itl_violations": c.get("slo.itl_violations", 0),
+            }
         if self.paged:
             st = self.kv.stats(active_slots=len(self.active_slots))
             derived["pool"] = {
@@ -1266,16 +1326,28 @@ class StreamedBatchEngine:
             self.caches = new_caches
         self.decode_steps += 1
         picks = host_fetch(nxt)  # (B,) int32 — the tick's only D2H
+        t1 = time.perf_counter()
+        attrib = (dict(uids=[s.uid for s in act],
+                       slot_ids=[s.index for s in act],
+                       toks=[1] * len(act))
+                  if self.obs.enabled else None)
         for s in act:
             s.cur += 1
             s.pending = int(picks[s.index])
             s.emitted.append(int(picks[s.index]))
+            # Per-request ITL: time since this slot's previous emitted
+            # token (a readmitted slot's first tick absorbs its stall).
+            gap = t1 - s.t_last
+            s.t_last = t1
+            if gap > s.itl_max:
+                s.itl_max = gap
+            self.metrics.observe("latency.itl_s", gap)
             self._reap(s)
         self._account_tick(
-            "decode_tick", ot0, time.perf_counter() - t0,
+            "decode_tick", ot0, t1 - t0,
             n_slots=len(act), new_tokens=len(act),
             d2h_bytes=int(picks.nbytes), h2d_bytes=h2d_bytes,
-            budget=self._decode_budget)
+            budget=self._decode_budget, attrib=attrib)
 
     # -- speculative decode ----------------------------------------------------
 
@@ -1340,7 +1412,11 @@ class StreamedBatchEngine:
                 d_len[s.index] = draft.size
                 self.spec_proposed += int(draft.size)
         self.obs.add("decode", "spec_draft", dt0,
-                     proposed=int(d_len.sum()))
+                     proposed=int(d_len.sum()),
+                     **(dict(uids=[s.uid for s in act],
+                             slot_ids=[s.index for s in act],
+                             drafted=[int(d_len[s.index]) for s in act])
+                        if self.obs.enabled else {}))
         if not int(d_len.sum()):
             # Every drafter came back empty (lookup miss, or the slots are
             # at their final token): the k+1-wide verify step would pay
@@ -1370,7 +1446,11 @@ class StreamedBatchEngine:
         emit = host_fetch(emit)  # (B, k+1) + (B,): the tick's only D2H
         n_accept = host_fetch(n_accept)
         new_tokens = 0
+        t1 = time.perf_counter()
         rt0 = self.obs.t()
+        attrib = (dict(uids=[s.uid for s in act],
+                       slot_ids=[s.index for s in act], toks=[])
+                  if self.obs.enabled else None)
         for s in act:
             n = int(n_accept[s.index])
             self.spec_accepted += n
@@ -1379,6 +1459,18 @@ class StreamedBatchEngine:
             s.cur += n + 1
             s.pending = new[-1]
             s.emitted.extend(new)
+            # A spec tick emits n+1 tokens per slot at once: the per-token
+            # ITL is the gap since the slot's last emit split across them,
+            # observed once per emitted token so the histogram stays
+            # token-weighted (same units as a plain tick's single sample).
+            gap = (t1 - s.t_last) / (n + 1)
+            s.t_last = t1
+            if gap > s.itl_max:
+                s.itl_max = gap
+            for _ in range(n + 1):
+                self.metrics.observe("latency.itl_s", gap)
+            if attrib is not None:
+                attrib["toks"].append(n + 1)
             if self.paged:
                 # Rollback: pages faulted for rejected draft positions go
                 # home; what stays is exactly pages_for(cur) — the same
@@ -1387,14 +1479,15 @@ class StreamedBatchEngine:
             self._reap(s)
         if self.paged:
             self.obs.add("transfer", "spec_rollback", rt0,
-                         accepted=new_tokens - len(act))
+                         accepted=new_tokens - len(act),
+                         **({"uids": attrib["uids"]} if attrib else {}))
         self._account_tick(
-            "spec_tick", ot0, time.perf_counter() - t0,
+            "spec_tick", ot0, t1 - t0,
             n_slots=len(act), new_tokens=new_tokens,
             d2h_bytes=int(emit.nbytes) + int(n_accept.nbytes),
             h2d_bytes=(int(toks.nbytes) + int(cur.nbytes)
                        + int(d_len.nbytes)),
-            budget=self._verify_budget)
+            budget=self._verify_budget, attrib=attrib)
 
     # -- scheduling loop -------------------------------------------------------
 
@@ -1475,12 +1568,14 @@ class StreamedBatchEngine:
             caches = self._gather_jit(self.caches, jnp.int32(slot.index))
             n_pages = 0
         self.obs.add("transfer", "evict", et0, uid=uid, pages=n_pages,
-                     cur=slot.cur)
+                     cur=slot.cur, slot=slot.index)
         ev = EvictedRequest(
             uid=uid, caches=caches,
             cur=slot.cur, pending=slot.pending,
             emitted=list(slot.emitted), max_new=slot.max_new,
-            n_pages=n_pages, seq=slot.seq, prompt=slot.prompt)
+            n_pages=n_pages, seq=slot.seq, prompt=slot.prompt,
+            ttft_s=slot.ttft_s, t_last=slot.t_last,
+            itl_max=slot.itl_max, evictions=slot.evictions + 1)
         slot.uid = None
         slot.emitted = []
         slot.prompt = None
@@ -1540,13 +1635,18 @@ class StreamedBatchEngine:
             self.caches = self._scatter_jit(
                 self.caches, ev.caches, jnp.int32(slot.index))
         self.obs.add("transfer", "readmit", rt0, uid=ev.uid,
-                     pages=ev.n_pages, shared_pages=shared_pages)
+                     pages=ev.n_pages, shared_pages=shared_pages,
+                     slot=slot.index)
         slot.uid = ev.uid
         slot.cur = ev.cur
         slot.pending = ev.pending
         slot.emitted = list(ev.emitted)
         slot.max_new = ev.max_new
         slot.prompt = ev.prompt
+        slot.ttft_s = ev.ttft_s
+        slot.t_last = ev.t_last  # the stall lands in the next tick's gap
+        slot.itl_max = ev.itl_max
+        slot.evictions = ev.evictions
         # Restore the original admission order: a fresh seq here would make
         # every readmitted request the "youngest" and thus the next victim
         # of _preempt_for_pages — preempt/readmit thrash under pressure.

@@ -1,0 +1,162 @@
+"""The perf-regression sentinel (``repro.obs.baseline``): identical
+docs pass, synthetic collapses trip the right gate, and schema drift
+(a metric or mode going missing) is itself a violation.  Pure-dict
+comparisons — no bench run, no jax."""
+
+import copy
+import json
+
+import pytest
+
+from repro.obs.baseline import (DEFAULT_MIN_RATIO, DEFAULT_MAX_RATIO,
+                                Violation, compare_obs, compare_serving,
+                                main, render)
+
+SERVING = {
+    "bench": "serving", "arch": "qwen3-4b", "schema": 1,
+    "metrics": {
+        "serving_tokens_per_s": {"value": 400.0, "note": "cb"},
+        "serving_seq_tokens_per_s": {"value": 150.0, "note": "seq"},
+        "serving_paged_tokens_per_s": {"value": 380.0, "note": "paged"},
+        "serving_admit_ms": {"value": 30.0, "note": "mean"},
+        "serving_admit_ms_p99": {"value": 90.0, "note": "p99"},
+        "serving_speedup": {"value": 2.6, "note": "ungated"},
+        "tuning_plan": {"value": "chunk=24", "note": "knob string"},
+    },
+}
+
+OBS = {
+    "bench": "obs", "arch": "qwen3-4b", "schema": 1,
+    "modes": [{
+        "mode": "paged",
+        "tokens_per_s": {"untraced": 300.0, "traced": 290.0},
+        "ttft_ms": {"p50": 40.0, "p99": 80.0},
+        "itl_ms": {"p50": 3.0, "p99": 9.0},
+        "overlap": {"measured": 0.55, "predicted": 0.8},
+        "dropped_spans": 0,
+        "str002_live": 0,
+    }],
+}
+
+
+def _kinds(violations):
+    return sorted(v.kind for v in violations)
+
+
+class TestServingGates:
+    def test_identical_docs_pass(self):
+        assert compare_serving(SERVING, SERVING) == []
+
+    def test_throughput_collapse(self):
+        fresh = copy.deepcopy(SERVING)
+        fresh["metrics"]["serving_tokens_per_s"]["value"] = 400.0 * 0.2
+        (v,) = compare_serving(fresh, SERVING)
+        assert v.kind == "throughput"
+        assert v.where == "serving_tokens_per_s"
+        assert "below" in v.detail
+
+    def test_latency_blowup(self):
+        fresh = copy.deepcopy(SERVING)
+        fresh["metrics"]["serving_admit_ms_p99"]["value"] = 90.0 * 5
+        (v,) = compare_serving(fresh, SERVING)
+        assert v.kind == "latency" and v.where == "serving_admit_ms_p99"
+
+    def test_jitter_within_band_passes(self):
+        fresh = copy.deepcopy(SERVING)
+        fresh["metrics"]["serving_tokens_per_s"]["value"] = \
+            400.0 * DEFAULT_MIN_RATIO * 1.01
+        fresh["metrics"]["serving_admit_ms"]["value"] = \
+            30.0 * DEFAULT_MAX_RATIO * 0.99
+        assert compare_serving(fresh, SERVING) == []
+
+    def test_missing_metric_is_violation(self):
+        fresh = copy.deepcopy(SERVING)
+        del fresh["metrics"]["serving_paged_tokens_per_s"]
+        (v,) = compare_serving(fresh, SERVING)
+        assert v.kind == "missing"
+        assert v.where == "serving_paged_tokens_per_s"
+
+    def test_ungated_metrics_ignored(self):
+        """speedup and the tuning knob string are outside the gate set;
+        they can move (or vanish) freely."""
+        fresh = copy.deepcopy(SERVING)
+        fresh["metrics"]["serving_speedup"]["value"] = 0.1
+        del fresh["metrics"]["tuning_plan"]
+        assert compare_serving(fresh, SERVING) == []
+
+
+class TestObsGates:
+    def test_identical_docs_pass(self):
+        assert compare_obs(OBS, OBS) == []
+
+    def test_throughput_latency_overlap(self):
+        fresh = copy.deepcopy(OBS)
+        m = fresh["modes"][0]
+        m["tokens_per_s"]["untraced"] = 300.0 * 0.2
+        m["itl_ms"]["p99"] = 9.0 * 10
+        m["overlap"]["measured"] = 0.55 - 0.5
+        vs = compare_obs(fresh, OBS)
+        assert _kinds(vs) == ["latency", "overlap", "throughput"]
+
+    def test_hard_zeros(self):
+        fresh = copy.deepcopy(OBS)
+        fresh["modes"][0]["dropped_spans"] = 12
+        fresh["modes"][0]["str002_live"] = 1
+        vs = compare_obs(fresh, OBS)
+        assert _kinds(vs) == ["zero", "zero"]
+        assert {v.where for v in vs} == {"paged.dropped_spans",
+                                         "paged.str002_live"}
+
+    def test_missing_mode(self):
+        fresh = copy.deepcopy(OBS)
+        fresh["modes"] = []
+        (v,) = compare_obs(fresh, OBS)
+        assert v.kind == "missing" and v.where == "paged"
+
+    def test_overlap_slack_is_absolute(self):
+        fresh = copy.deepcopy(OBS)
+        fresh["modes"][0]["overlap"]["measured"] = 0.55 - 0.34
+        assert compare_obs(fresh, OBS) == []
+        fresh["modes"][0]["overlap"]["measured"] = 0.55 - 0.36
+        assert _kinds(compare_obs(fresh, OBS)) == ["overlap"]
+
+
+class TestRenderAndCLI:
+    def test_render(self):
+        assert "OK" in render([])
+        out = render([Violation("x", "throughput", 1.0, 10.0, "x fell")])
+        assert "FAILED" in out and "x fell" in out
+
+    def test_cli_pass_and_fail(self, tmp_path, capsys):
+        base = tmp_path / "base.json"
+        base.write_text(json.dumps(OBS))
+        good = tmp_path / "good.json"
+        good.write_text(json.dumps(OBS))
+        assert main(["--obs", str(good),
+                     "--baseline-obs", str(base)]) == 0
+        assert "OK" in capsys.readouterr().out
+
+        bad_doc = copy.deepcopy(OBS)
+        bad_doc["modes"][0]["str002_live"] = 3
+        bad = tmp_path / "bad.json"
+        bad.write_text(json.dumps(bad_doc))
+        assert main(["--obs", str(bad),
+                     "--baseline-obs", str(base)]) == 1
+        assert "FAILED" in capsys.readouterr().out
+
+    def test_cli_requires_an_input(self, capsys):
+        with pytest.raises(SystemExit):
+            main([])
+
+    def test_committed_baselines_self_consistent(self):
+        """The repo's own committed baselines must pass against
+        themselves — the sentinel's trivial fixed point."""
+        from pathlib import Path
+        root = Path(__file__).resolve().parents[1]
+        serving = json.loads((root / "BENCH_serving.json").read_text())
+        obs = json.loads((root / "BENCH_obs.json").read_text())
+        assert compare_serving(serving, serving) == []
+        assert compare_obs(obs, obs) == []
+        # and the committed obs baseline honors the hard zero gates
+        for m in obs["modes"]:
+            assert m["dropped_spans"] == 0 and m["str002_live"] == 0

@@ -1,0 +1,341 @@
+"""Request-scoped observability: per-request timeline reconstruction
+(``repro.obs.requests``), its agreement with the engine's own metric
+histograms, eviction/readmission edge cases, and SLO scoring
+(``repro.obs.slo``) both offline and inside the engine."""
+
+import math
+
+import jax
+import numpy as np
+import pytest
+
+import repro.configs as C
+from repro.models import transformer as T
+from repro.obs import (SLOPolicy, Span, Tracer, reconstruct_timelines,
+                       score_timelines, timeline_aggregates,
+                       timelines_from_trace)
+from repro.runtime.serving import ServeConfig, StreamedBatchEngine
+
+# ---------------------------------------------------------------------------
+# synthetic-span reconstruction (no engine, nanosecond-exact)
+
+MS = 1_000_000  # ns
+
+
+def _admit(uid, t0, t1, *, queue_wait_s=0.0, prompt_len=8, max_new=4,
+           slot=0, chunks=1, shared_len=0):
+    return Span("prefill", "admit", t0, t1, dict(
+        uid=uid, chunks=chunks, shared_len=shared_len,
+        prompt_len=prompt_len, slot=slot, queue_wait_s=queue_wait_s,
+        max_new=max_new))
+
+
+def _tick(t0, t1, uids, toks, name="decode_tick"):
+    return Span("decode", name, t0, t1,
+                dict(uids=list(uids), toks=list(toks),
+                     slot_ids=list(range(len(uids)))))
+
+
+class TestReconstructSynthetic:
+    def test_empty_trace(self):
+        assert reconstruct_timelines([]) == []
+
+    def test_single_request_lifecycle(self):
+        spans = [
+            _admit(7, 0, 10 * MS, queue_wait_s=0.005, max_new=3),
+            _tick(10 * MS, 14 * MS, [7], [1]),
+            _tick(14 * MS, 20 * MS, [7], [1]),
+        ]
+        (tl,) = reconstruct_timelines(spans)
+        assert tl.uid == 7 and tl.finished and not tl.partial
+        assert tl.tokens == 3  # first token at admit + two tick tokens
+        assert tl.queue_wait_s == pytest.approx(0.005)
+        assert tl.admit_s == pytest.approx(0.010)
+        assert tl.ttft_s == pytest.approx(0.015)
+        assert tl.itl_s == pytest.approx([0.004, 0.006])
+        assert tl.itl_max_s == pytest.approx(0.006)
+        assert tl.slots == [0]
+
+    def test_spec_burst_splits_gap_per_token(self):
+        """A spec tick emitting n tokens contributes n equal gaps — the
+        same per-token value the engine's itl_s histogram observes."""
+        spans = [
+            _admit(1, 0, 10 * MS, max_new=7),
+            _tick(10 * MS, 22 * MS, [1], [3], name="spec_tick"),
+            _tick(22 * MS, 30 * MS, [1], [3], name="spec_tick"),
+        ]
+        (tl,) = reconstruct_timelines(spans)
+        assert tl.tokens == 7 and tl.finished
+        assert tl.itl_s == pytest.approx([0.004] * 3 + [0.008 / 3] * 3)
+
+    def test_open_ended_trace_not_finished(self):
+        """A trace cut mid-decode: tokens < max_new, finished stays
+        False, but the per-token data up to the cut is intact."""
+        spans = [
+            _admit(1, 0, 10 * MS, max_new=16),
+            _tick(10 * MS, 15 * MS, [1], [1]),
+        ]
+        (tl,) = reconstruct_timelines(spans)
+        assert not tl.finished and not tl.partial
+        assert tl.tokens == 2 and len(tl.itl_s) == 1
+
+    def test_evict_without_readmit_is_open_stall(self):
+        spans = [
+            _admit(1, 0, 10 * MS, max_new=8),
+            _tick(10 * MS, 15 * MS, [1], [1]),
+            Span("transfer", "evict", 15 * MS, 16 * MS,
+                 dict(uid=1, pages=3, cur=9, slot=0)),
+            _tick(16 * MS, 40 * MS, [], []),  # others keep decoding
+        ]
+        (tl,) = reconstruct_timelines(spans)
+        assert tl.evictions == 1 and tl.open_stall and not tl.finished
+        # stall closed at the trace end so stall_s stays meaningful
+        assert tl.stall_s == pytest.approx((40 - 16) * 1e-3)
+        assert tl.pages_moved == 3
+
+    def test_evict_readmit_stall_interval(self):
+        spans = [
+            _admit(1, 0, 10 * MS, max_new=4, slot=0),
+            _tick(10 * MS, 14 * MS, [1], [1]),
+            Span("transfer", "evict", 14 * MS, 15 * MS,
+                 dict(uid=1, pages=2, cur=9, slot=0)),
+            Span("transfer", "readmit", 30 * MS, 31 * MS,
+                 dict(uid=1, pages=2, shared_pages=0, slot=1)),
+            _tick(31 * MS, 35 * MS, [1], [1]),
+            _tick(35 * MS, 39 * MS, [1], [1]),
+        ]
+        (tl,) = reconstruct_timelines(spans)
+        assert tl.finished and not tl.open_stall
+        assert tl.evictions == 1
+        assert tl.stalls == [(15 * MS, 31 * MS)]
+        assert tl.pages_moved == 4  # gather out + scatter back
+        assert tl.slots == [0, 1]
+        # the stall lands in the first post-readmit gap
+        assert tl.itl_max_s == pytest.approx((35 - 14) * 1e-3)
+
+    def test_headless_uid_is_partial(self):
+        """Decode ticks for a uid whose admission span is missing (ring
+        wrap or filtered trace): flagged partial, not invented."""
+        (tl,) = reconstruct_timelines([_tick(0, 5 * MS, [3], [1])])
+        assert tl.partial and tl.tokens == 1 and tl.admit_s == 0.0
+
+    def test_dropped_marks_all_partial_and_warns(self):
+        spans = [_admit(1, 0, 10 * MS), _tick(10 * MS, 14 * MS, [1], [1])]
+        with pytest.warns(RuntimeWarning, match="dropped 5 spans"):
+            tls = reconstruct_timelines(spans, dropped=5)
+        assert all(t.partial for t in tls)
+        # warn=False is the programmatic path (doctor calls it in a loop)
+        assert reconstruct_timelines(spans, dropped=5, warn=False)
+
+    def test_aggregates(self):
+        spans = [
+            _admit(1, 0, 10 * MS, queue_wait_s=0.002, max_new=2),
+            _admit(2, 0, 20 * MS, queue_wait_s=0.004, max_new=2, slot=1),
+            _tick(20 * MS, 24 * MS, [1, 2], [1, 1]),
+        ]
+        agg = timeline_aggregates(reconstruct_timelines(spans))
+        assert agg["requests"] == 2 and agg["finished"] == 2
+        assert agg["partial"] == 0 and agg["tokens"] == 4
+        assert agg["ttft_mean_s"] == pytest.approx(0.015)  # admit mean
+        assert agg["itl_count"] == 2
+        assert agg["queue_wait_p50_s"] == pytest.approx(0.003)
+
+
+# ---------------------------------------------------------------------------
+# engine integration
+
+
+@pytest.fixture(scope="module")
+def served():
+    cfg = C.get_smoke_config("qwen3-4b")
+    return cfg, T.init_params(cfg, jax.random.PRNGKey(0))
+
+
+def _prompts(cfg, lens, seed=1):
+    return [np.asarray(jax.random.randint(
+        jax.random.PRNGKey(seed + i), (n,), 0, cfg.vocab_size))
+        for i, n in enumerate(lens)]
+
+
+def _scfg(**kw):
+    base = dict(max_seq=64, prefill_chunk=16, max_new_tokens=5,
+                max_batch=2, paged=True, block_size=16)
+    base.update(kw)
+    return ServeConfig(**base)
+
+
+@pytest.fixture(scope="module")
+def traced_run(served):
+    """One traced paged run: 4 requests through 2 slots (so two of them
+    genuinely wait in the queue)."""
+    cfg, params = served
+    eng = StreamedBatchEngine(cfg, params, _scfg(), tracer=Tracer())
+    uids = [eng.submit(p) for p in _prompts(cfg, [24, 16, 32, 16])]
+    out = eng.run()
+    return eng, uids, out
+
+
+class TestEngineTimelines:
+    def test_full_lifecycles(self, traced_run):
+        eng, uids, out = traced_run
+        tls = reconstruct_timelines(eng.obs.spans())
+        assert [t.uid for t in tls] == sorted(uids)
+        by_uid = {t.uid: t for t in tls}
+        for uid in uids:
+            tl = by_uid[uid]
+            assert tl.finished and not tl.partial
+            assert tl.tokens == len(out[uid])
+            assert len(tl.itl_s) == tl.tokens - 1
+            assert tl.admit_s > 0 and tl.ttft_s >= tl.admit_s
+        # 2 slots, 4 requests: the last two waited on a reap
+        waits = sorted(t.queue_wait_s for t in tls)
+        assert waits[-1] > 0
+
+    def test_agreement_with_histograms(self, traced_run):
+        """The acceptance bar: trace-rebuilt TTFT/ITL aggregates agree
+        with the MetricsRegistry histograms within bucket error (the
+        histogram's geometric buckets grow 8%; the reconstruction reads
+        the same clock stamps, so the means land much closer)."""
+        eng, _, _ = traced_run
+        agg = timeline_aggregates(reconstruct_timelines(eng.obs.spans()))
+        ttft = eng.metrics.histogram("latency.ttft_s").snapshot()
+        itl = eng.metrics.histogram("latency.itl_s").snapshot()
+        qw = eng.metrics.histogram("latency.queue_wait_s").snapshot()
+        assert agg["requests"] == ttft["count"] == qw["count"]
+        assert agg["itl_count"] == itl["count"]
+        assert agg["ttft_mean_s"] == pytest.approx(ttft["mean"], rel=0.05)
+        assert agg["itl_mean_s"] == pytest.approx(itl["mean"], rel=0.05)
+        assert agg["queue_wait_mean_s"] == pytest.approx(
+            qw["mean"], rel=0.05, abs=1e-6)
+
+    def test_chrome_round_trip(self, traced_run, tmp_path):
+        eng, _, _ = traced_run
+        path = tmp_path / "trace.json"
+        eng.obs.to_chrome(str(path))
+        tls = timelines_from_trace(str(path))
+        direct = reconstruct_timelines(eng.obs.spans())
+        assert [t.uid for t in tls] == [t.uid for t in direct]
+        for a, b in zip(tls, direct):
+            # µs export rounding only
+            assert a.tokens == b.tokens and a.finished == b.finished
+            assert a.ttft_s == pytest.approx(b.ttft_s, abs=1e-5)
+
+    def test_evict_readmit_mid_decode(self, served):
+        """Manual preemption mid-decode: the timeline carries the
+        eviction, the stall interval, both slots, and still finishes."""
+        cfg, params = served
+        eng = StreamedBatchEngine(cfg, params, _scfg(max_new_tokens=8),
+                                  tracer=Tracer())
+        uid_a, uid_b = [eng.submit(p) for p in _prompts(cfg, [24, 16])]
+        for _ in range(3):
+            eng.step()
+        ev = eng.evict(uid_a)
+        eng.step()  # uid_b decodes alone while uid_a is out
+        eng.readmit(ev)
+        out = eng.run()
+        tls = {t.uid: t for t in reconstruct_timelines(eng.obs.spans())}
+        tl = tls[uid_a]
+        assert tl.evictions == 1 and not tl.open_stall
+        assert len(tl.stalls) == 1 and tl.stall_s > 0
+        assert len(tl.slots) == 2  # admission slot + readmission slot
+        assert tl.finished and tl.tokens == len(out[uid_a])
+        assert tl.itl_max_s >= tl.stall_s  # the stall shows up as a gap
+        assert tls[uid_b].evictions == 0 and tls[uid_b].finished
+
+
+# ---------------------------------------------------------------------------
+# SLO policy + scoring
+
+
+class TestSLOPolicy:
+    def test_met_semantics(self):
+        p = SLOPolicy(ttft_s=0.1, itl_s=0.05)
+        assert p.met(ttft_s=0.1, itl_s=0.05)  # inclusive bounds
+        assert not p.met(ttft_s=0.11, itl_s=0.01)
+        assert not p.met(ttft_s=0.01, itl_s=0.06)
+
+    def test_from_ms_and_as_dict(self):
+        p = SLOPolicy.from_ms(ttft_ms=250)
+        assert p.ttft_s == pytest.approx(0.25)
+        assert math.isinf(p.itl_s)
+        assert p.as_dict() == {"ttft_s": pytest.approx(0.25),
+                               "itl_s": None}
+
+    def test_rejects_nonpositive_targets(self):
+        with pytest.raises(ValueError, match="positive"):
+            SLOPolicy(ttft_s=0.0)
+
+    def test_score_timelines_skips_unfinished_and_partial(self):
+        spans = [
+            _admit(1, 0, 10 * MS, max_new=2),
+            _tick(10 * MS, 14 * MS, [1], [1]),   # finished, fast
+            _admit(2, 0, 10 * MS, max_new=99),   # unfinished
+            _tick(0, 5 * MS, [9], [1]),          # headless -> partial
+        ]
+        s = score_timelines(reconstruct_timelines(spans),
+                            SLOPolicy(ttft_s=1.0, itl_s=1.0), wall_s=2.0)
+        assert s["requests"] == 1 and s["met"] == 1
+        assert s["attainment"] == 1.0
+        assert s["goodput_tokens"] == 2
+        assert s["goodput_tokens_per_s"] == pytest.approx(1.0)
+
+    def test_score_timelines_counts_violations(self):
+        spans = [
+            _admit(1, 0, 10 * MS, max_new=2),
+            _tick(10 * MS, 14 * MS, [1], [1]),
+        ]
+        s = score_timelines(reconstruct_timelines(spans),
+                            SLOPolicy(ttft_s=1e-6, itl_s=1.0))
+        assert s["attainment"] == 0.0
+        assert s["ttft_violations"] == 1 and s["itl_violations"] == 0
+
+
+class TestEngineSLO:
+    def test_generous_policy_full_attainment(self, served):
+        cfg, params = served
+        eng = StreamedBatchEngine(cfg, params, _scfg(),
+                                  slo=SLOPolicy(ttft_s=60.0, itl_s=60.0))
+        uids = [eng.submit(p) for p in _prompts(cfg, [24, 16, 32])]
+        out = eng.run()
+        slo = eng.metrics_snapshot()["derived"]["slo"]
+        assert slo["requests"] == 3 and slo["met"] == 3
+        assert slo["attainment"] == 1.0
+        assert slo["policy"] == {"ttft_s": 60.0, "itl_s": 60.0}
+        assert slo["goodput_tokens_per_s"] > 0
+        total = sum(len(out[u]) for u in uids)
+        assert eng.metrics.value("slo.goodput_tokens") == total
+
+    def test_impossible_policy_zero_attainment(self, served):
+        cfg, params = served
+        eng = StreamedBatchEngine(cfg, params, _scfg(),
+                                  slo=SLOPolicy(ttft_s=1e-9))
+        eng.submit(_prompts(cfg, [16])[0])
+        eng.run()
+        slo = eng.metrics_snapshot()["derived"]["slo"]
+        assert slo["attainment"] == 0.0
+        assert slo["ttft_violations"] == 1
+        assert slo["goodput_tokens_per_s"] == 0.0
+
+    def test_no_policy_no_slo_block(self, served):
+        cfg, params = served
+        eng = StreamedBatchEngine(cfg, params, _scfg())
+        eng.submit(_prompts(cfg, [16])[0])
+        eng.run()
+        assert "slo" not in eng.metrics_snapshot()["derived"]
+
+    def test_engine_matches_offline_scoring(self, served):
+        """The engine's reap-time accounting and the offline
+        trace-driven scorer agree on the same run."""
+        cfg, params = served
+        policy = SLOPolicy(ttft_s=60.0, itl_s=60.0)
+        eng = StreamedBatchEngine(cfg, params, _scfg(), tracer=Tracer(),
+                                  slo=policy)
+        [eng.submit(p) for p in _prompts(cfg, [24, 16, 32])]
+        eng.run()
+        engine_slo = eng.metrics_snapshot()["derived"]["slo"]
+        offline = score_timelines(
+            reconstruct_timelines(eng.obs.spans()), policy)
+        assert offline["requests"] == engine_slo["requests"]
+        assert offline["met"] == engine_slo["met"]
+        assert offline["goodput_tokens"] == eng.metrics.value(
+            "slo.goodput_tokens")
